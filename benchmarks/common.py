@@ -1,0 +1,22 @@
+"""Shared benchmark utilities: CSV emission per the harness contract
+(`name,us_per_call,derived` rows) + experiment helpers."""
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+    @property
+    def us(self):
+        return self.dt * 1e6

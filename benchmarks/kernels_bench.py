@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: wall time of the Pallas kernels (interpret
+mode on CPU — correctness-representative, not perf-representative; real
+perf comes from the dry-run roofline) vs their pure-jnp oracles."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Timer, emit
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _bench(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    with Timer() as t:
+        for _ in range(iters):
+            jax.block_until_ready(fn(*args))
+    return t.us / iters
+
+
+def run():
+    from repro.kernels.flash_attention.kernel import flash_attention_fwd
+    from repro.kernels.flash_attention.ref import attention_ref
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (8, 512, 64))
+    k = jax.random.normal(ks[1], (4, 512, 64))
+    v = jax.random.normal(ks[2], (4, 512, 64))
+    us_k = _bench(jax.jit(lambda q, k, v: flash_attention_fwd(
+        q, k, v, causal=True, groups=2, interpret=True)), q, k, v)
+    us_r = _bench(jax.jit(lambda q, k, v: attention_ref(
+        q, k, v, causal=True, groups=2)), q, k, v)
+    emit("kern.flash_attn.8x512x64", us_k, f"ref_us={us_r:.0f}")
+
+    from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+    from repro.models.ssm import ssd_scan_ref
+    b, s, h, p, n = 2, 512, 4, 64, 32
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    us_k = _bench(jax.jit(lambda *a: ssd_scan_pallas(
+        *a, chunk=128, interpret=True)), x, dt, A, B, C)
+    us_r = _bench(jax.jit(lambda *a: ssd_scan_ref(*a, chunk=128)),
+                  x, dt, A, B, C)
+    emit("kern.ssd_scan.2x512x4x64", us_k, f"ref_us={us_r:.0f}")
+
+    from repro.kernels.moe_gmm.kernel import moe_gmm
+    from repro.kernels.moe_gmm.ref import moe_gmm_ref
+    ks = jax.random.split(KEY, 4)
+    xg = jax.random.normal(ks[0], (8, 128, 256)) * 0.5
+    wg = jax.random.normal(ks[1], (8, 256, 512)) * 0.05
+    wu = jax.random.normal(ks[2], (8, 256, 512)) * 0.05
+    wd = jax.random.normal(ks[3], (8, 512, 256)) * 0.05
+    us_k = _bench(jax.jit(lambda *a: moe_gmm(*a, interpret=True)),
+                  xg, wg, wu, wd)
+    us_r = _bench(jax.jit(moe_gmm_ref), xg, wg, wu, wd)
+    emit("kern.moe_gmm.8x128x256x512", us_k, f"ref_us={us_r:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Figure 3 — sizes and FLOPs of model portions (Wc_1 < Wc_2 < Wc_3 < W)
+for the paper's three models, via the thop-equivalent accounting in
+repro.utils.flops."""
+from __future__ import annotations
+
+from benchmarks.common import Timer, emit
+from repro.configs import get_config
+from repro.core.split import default_plan
+from repro.models import SplitModel
+from repro.utils.flops import client_portion_size, full_size, split_costs
+
+
+def run():
+    for arch in ("resnet8", "vgg16", "mobilenet"):
+        model = SplitModel(get_config(arch))
+        plan = default_plan(model.n_units, k=3)
+        with Timer() as t:
+            rows = []
+            for i, s in enumerate(plan.split_points):
+                c = split_costs(model, s)
+                rows.append((f"Wc_{i + 1}", client_portion_size(model, s),
+                             c["fc"]))
+            rows.append(("W", full_size(model),
+                         split_costs(model, 1)["f_full"]))
+        for name, size, fl in rows:
+            emit(f"fig3.{arch}.{name}", t.us / len(rows),
+                 f"params={size:.3e};flops={fl:.3e}")
+        # invariant from the paper: Wc_1 < Wc_2 < Wc_3 < W
+        sizes = [r[1] for r in rows]
+        assert all(a < b for a, b in zip(sizes, sizes[1:])), (arch, sizes)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Roofline benchmark — reads the dry-run matrix JSON (produced by
+``python -m repro.launch.dryrun --all --json dryrun_single_pod.json``) and
+emits the three roofline terms per (arch × shape). If the JSON is missing,
+computes a single fresh pair (internlm2-1.8b × train_4k) inline.
+
+The full analysis narrative lives in EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Timer, emit
+
+JSON_PATHS = ("dryrun_single_pod.json", "/root/repo/dryrun_single_pod.json")
+
+
+def run():
+    recs = None
+    for p in JSON_PATHS:
+        if os.path.exists(p):
+            with open(p) as f:
+                recs = json.load(f)
+            break
+    if recs is None:
+        from repro.launch.dryrun import dryrun_one
+        with Timer() as t:
+            recs = [dryrun_one("internlm2-1.8b", "train_4k",
+                               verbose=False)]
+    for r in recs:
+        if r.get("skipped"):
+            emit(f"roofline.{r['arch']}.{r['shape']}", 0.0, "skipped")
+            continue
+        if "error" in r:
+            emit(f"roofline.{r['arch']}.{r['shape']}", 0.0,
+                 f"ERROR={r['error'][:80]}")
+            continue
+        emit(f"roofline.{r['arch']}.{r['shape']}",
+             max(r["t_compute_s"], r["t_memory_s"],
+                 r["t_collective_s"]) * 1e6,
+             f"compute_s={r['t_compute_s']:.4f};"
+             f"memory_s={r['t_memory_s']:.4f};"
+             f"collective_s={r['t_collective_s']:.4f};"
+             f"dominant={r['dominant']};useful={r['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

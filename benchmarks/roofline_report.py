@@ -1,0 +1,54 @@
+"""Render the EXPERIMENTS.md §Roofline table from the dry-run JSON(s).
+
+  PYTHONPATH=src python -m benchmarks.roofline_report \
+      dryrun_single_pod.json [dryrun_multi_pod.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt(r: dict) -> str:
+    if r.get("skipped"):
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | skip "
+                f"({r['reason'][:30]}) | — | — |")
+    if "error" in r:
+        return f"| {r['arch']} | {r['shape']} | ERROR {r['error'][:60]} |"
+    peak = r.get("peak_bytes") or 0
+    return ("| {arch} | {shape} | {tc:.3f} | {tm:.3f} | {tl:.3f} | "
+            "**{dom}** | {uf:.2f} | {pk:.1f} | {cs:.0f} |".format(
+                arch=r["arch"], shape=r["shape"], tc=r["t_compute_s"],
+                tm=r["t_memory_s"], tl=r["t_collective_s"],
+                dom=r["dominant"], uf=r["useful_ratio"], pk=peak / 1e9,
+                cs=r.get("compile_s", 0)))
+
+
+def main(paths):
+    for p in paths:
+        with open(p) as f:
+            recs = json.load(f)
+        chips = next((r.get("chips") for r in recs if "chips" in r), "?")
+        print(f"\n### {p} ({chips} chips)\n")
+        print("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+              "dominant | useful | peak GB/chip | compile s |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in recs:
+            print(fmt(r))
+        live = [r for r in recs if "dominant" in r]
+        doms = {}
+        for r in live:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        print(f"\n{len(live)} live pairs; dominant-term histogram: {doms}")
+        worst = sorted(live, key=lambda r: r["useful_ratio"])[:3]
+        coll = sorted(live, key=lambda r: -r["t_collective_s"])[:3]
+        print("lowest useful:", [(r["arch"], r["shape"],
+                                  round(r["useful_ratio"], 2))
+                                 for r in worst])
+        print("most collective-bound:",
+              [(r["arch"], r["shape"], round(r["t_collective_s"], 2))
+               for r in coll])
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["dryrun_single_pod.json"])

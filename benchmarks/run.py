@@ -1,0 +1,55 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig3,table3,...]
+  REPRO_BENCH_ROUNDS=40 ... python -m benchmarks.run --only table2
+
+Default set keeps CPU wall-time tractable: the accuracy suites (table2 /
+fig8) run at reduced rounds; scale up via REPRO_BENCH_ROUNDS.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig3", "benchmarks.portions"),        # portion sizes/FLOPs
+    ("table3", "benchmarks.time_comm"),     # time + comm overhead
+    ("fig5-7", "benchmarks.sweeps"),        # device sweeps
+    ("kernels", "benchmarks.kernels_bench"),
+    ("roofline", "benchmarks.roofline"),
+    ("table2", "benchmarks.accuracy"),      # accuracy (slow)
+    ("fig8", "benchmarks.ablation"),        # ablation (slow)
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: "
+                         + ",".join(k for k, _ in MODULES))
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            mod.run()
+            print(f"# {key} ({modname}) ok in {time.time() - t0:.0f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"{key}.FAILED,0,{modname}")
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

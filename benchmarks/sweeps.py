@@ -1,0 +1,89 @@
+"""Figures 5/6/7 — configuration sweeps on the Eq.-1 simulated clock:
+  fig5: number of participating devices x in {5, 10, 15, 20}
+  fig6: device compositions High:Mid:Low = 5:3:2 vs 2:3:5
+  fig7: client-set size |C| in {20, 50, 100} at fixed 0.1 sampling
+
+The time/straggler effects are what Eq. 1 defines, so these sweeps report
+the simulated per-round wall clock of SFL vs S²FL (the accuracy curves of
+the figures are covered by benchmarks/accuracy.py at reduced scale)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, emit
+
+
+def _sim(arch, n_devices, per_round, composition=None, rounds=20, seed=0):
+    from repro.configs import get_config
+    from repro.core.scheduler import SlidingSplitScheduler
+    from repro.core.simulation import device_round_time, make_device_grid
+    from repro.core.split import default_plan
+    from repro.models import SplitModel
+    from repro.utils.flops import split_costs
+
+    model = SplitModel(get_config(arch))
+    plan = default_plan(model.n_units, k=3)
+    costs = {s: split_costs(model, s) for s in plan.split_points}
+    devices = make_device_grid(n_devices, seed=seed,
+                               composition=composition)
+    rng = np.random.default_rng(seed)
+    p = 128
+
+    def t_of(dev, s):
+        c = costs[s]
+        return device_round_time(dev, wc_size=c["wc_size"],
+                                 feat_size=c["feat_size"], p=p,
+                                 fc=p * c["fc"], fs=p * c["fs"])
+
+    sfl_clock = 0.0
+    s3 = plan.largest()
+    sched = SlidingSplitScheduler(plan)
+    s2_clock = 0.0
+    for r in range(rounds):
+        part = rng.choice(devices, size=per_round, replace=False)
+        sfl_clock += max(t_of(d, s3) for d in part)
+        if sched.warming_up:
+            s = sched.warmup_split()
+            for d in devices:                # §3.1: warm-up hits all devices
+                sched.observe(d.cid, s, t_of(d, s))
+        sel = sched.select([d.cid for d in part])
+        ts = {}
+        for d in part:
+            ts[d.cid] = t_of(d, sel[d.cid])
+            sched.observe(d.cid, sel[d.cid], ts[d.cid])
+        s2_clock += max(ts.values())
+        sched.end_round()
+    return sfl_clock, s2_clock
+
+
+def run():
+    # fig 5: x devices per round
+    for x in (5, 10, 15, 20):
+        with Timer() as t:
+            sfl, s2 = _sim("vgg16", n_devices=100, per_round=x)
+        emit(f"fig5.devices_{x}", t.us,
+             f"sfl_clock={sfl:.1f};s2fl_clock={s2:.1f};"
+             f"speedup={sfl / s2:.2f}x")
+
+    # fig 6: compositions
+    for name, comp in (("5:3:2", {"high": 5, "mid": 3, "low": 2}),
+                       ("2:3:5", {"high": 2, "mid": 3, "low": 5})):
+        with Timer() as t:
+            sfl, s2 = _sim("vgg16", n_devices=100, per_round=10,
+                           composition=comp)
+        emit(f"fig6.comp_{name}", t.us,
+             f"sfl_clock={sfl:.1f};s2fl_clock={s2:.1f};"
+             f"speedup={sfl / s2:.2f}x")
+
+    # fig 7: |C| at 0.1 sampling
+    for C in (20, 50, 100):
+        with Timer() as t:
+            sfl, s2 = _sim("vgg16", n_devices=C,
+                           per_round=max(2, C // 10))
+        emit(f"fig7.clientset_{C}", t.us,
+             f"sfl_clock={sfl:.1f};s2fl_clock={s2:.1f};"
+             f"speedup={sfl / s2:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""End-to-end paper reproduction driver: FedAvg vs SFL vs S²FL on
+non-IID synthetic CIFAR with ResNet8, a few hundred rounds — the Table 2 /
+Figure 4 experiment at CPU scale.
+
+  PYTHONPATH=src python examples/paper_repro.py [--rounds 100] [--alpha 0.3]
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.core.engine import EngineConfig, S2FLEngine
+from repro.data.partition import federate
+from repro.data.synthetic import make_image_dataset
+from repro.models import SplitModel
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--alpha", type=float, default=0.3)
+    ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--local-steps", type=int, default=2)
+    args = ap.parse_args()
+
+    data = make_image_dataset(3000, seed=0)
+    test = make_image_dataset(600, seed=99)
+    fed = federate(data, args.clients, alpha=args.alpha, seed=0)
+    model = SplitModel(get_config("resnet8"))
+
+    results = {}
+    for mode in ("fedavg", "sfl", "s2fl"):
+        ecfg = EngineConfig(mode=mode, rounds=args.rounds,
+                            clients_per_round=5, batch_size=32,
+                            local_steps=args.local_steps,
+                            group_size=2, lr=0.05, seed=0)
+        eng = S2FLEngine(model, fed, ecfg)
+        eng.run(eval_data=test, eval_every=max(args.rounds // 5, 1))
+        res = eng.evaluate(test)
+        results[mode] = (res["acc"], eng.clock)
+        print(f"{mode:7s} acc={res['acc']:.4f} loss={res['loss']:.4f} "
+              f"sim_clock={eng.clock:.0f}s")
+    gain = results["s2fl"][0] - results["sfl"][0]
+    print(f"\nS²FL - SFL accuracy gain: {gain:+.4f} "
+          f"(paper: up to +16.5% on CIFAR-100/VGG16)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Pytree checkpointing to .npz (flat path-keyed arrays + structure)."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+def save_checkpoint(path: str, params, extra: dict | None = None):
+    flat = dict(_flatten(params))
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    meta = {"structure": jax.tree.structure(params).__repr__(),
+            "extra": extra or {}}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, __meta__=json.dumps(meta), **arrays)
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of `like` (a params pytree or abstract
+    tree with the same paths)."""
+    with np.load(path, allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files if k != "__meta__"}
+        meta = json.loads(str(z["__meta__"]))
+    paths = [p for p, _ in _flatten(like)]
+    assert set(paths) == set(flat), (
+        f"checkpoint/model mismatch: {set(paths) ^ set(flat)}")
+    leaves = [flat[p] for p, _ in _flatten(like)]
+    ref_leaves, treedef = jax.tree.flatten(like)
+    # _flatten order (sorted dict keys) must match tree.flatten order for
+    # dicts (jax sorts keys) and lists (index order) — identical here.
+    return jax.tree.unflatten(treedef, leaves), meta["extra"]

@@ -1,0 +1,5 @@
+from repro.configs.base import (CNNConfig, ModelConfig, get_config,
+                                list_configs, make_reduced, register)
+
+__all__ = ["ModelConfig", "CNNConfig", "get_config", "list_configs",
+           "make_reduced", "register"]

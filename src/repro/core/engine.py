@@ -1,0 +1,327 @@
+"""Algorithm 2 — the S²FL round engine (plus SFL and FedAvg baselines and
+the paper's ablation variants S²FL+{R,B,M,MB}).
+
+This is the host-level engine: exact per-device client portions, per-group
+server copies, E local SGD steps per round, Eq.-1 simulated clock, and
+Algorithm-1 aggregation. The fused SPMD equivalent used at pod scale lives
+in ``repro.core.round_step`` (E=1, documented equivalence, tested).
+
+Workflow per round (Fig. 1 steps 1–9):
+  1/2  scheduler picks Wc per device (client time table), W dispatched
+  3/4  devices run client fwd, upload features + labels
+  5    Main Server groups features (Eq. 2) and makes per-group Ws copies
+  6    per-group combined loss, backward, Ws update
+  7/8  feature gradients return, devices update Wc
+  9    Fed Server aggregates (Algorithm 1)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import simulation as sim
+from repro.core.aggregation import ClientState, aggregate, fedavg_aggregate
+from repro.core.balance import greedy_groups, label_histogram
+from repro.core.scheduler import FixedSplitScheduler, SlidingSplitScheduler
+from repro.core.split import SplitPlan, default_plan
+from repro.models.api import SplitModel
+from repro.optim import sgd
+from repro.utils import flops as flops_util
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    mode: str = "s2fl"            # 's2fl' | 'sfl' | 'fedavg'
+    use_balance: bool = True      # +B (False -> each device its own group)
+    use_sliding: bool = True      # +M (False -> fixed largest split)
+    scheduler: str = "median"     # 'median' (paper §3.1) | 'mintime'
+                                  # (beyond-paper, see scheduler.py)
+    rounds: int = 50
+    clients_per_round: int = 10
+    local_steps: int = 1          # E
+    batch_size: int = 32
+    lr: float = 0.01
+    group_size: int = 2           # devices per balance group
+    split_k: int = 3
+    seed: int = 0
+    n_classes: int = 10
+
+
+class S2FLEngine:
+    """Drives FedAvg / SFL / S²FL over a federated dataset.
+
+    data: {cid: {'x'|'tokens': ..., 'y'|'labels': ...}} host numpy arrays.
+    """
+
+    def __init__(self, model: SplitModel, data: dict, ecfg: EngineConfig,
+                 devices: Optional[list] = None,
+                 plan: Optional[SplitPlan] = None):
+        self.model = model
+        self.data = data
+        self.ecfg = ecfg
+        self.rng = np.random.default_rng(ecfg.seed)
+        self.plan = plan or default_plan(model.n_units, k=ecfg.split_k)
+        self.devices = devices or sim.make_device_grid(len(data),
+                                                       seed=ecfg.seed)
+        self.dev_by_id = {d.cid: d for d in self.devices}
+
+        if ecfg.mode == "s2fl" and ecfg.use_sliding:
+            if ecfg.scheduler == "mintime":
+                from repro.core.scheduler import MinTimeScheduler
+                self.scheduler = MinTimeScheduler(self.plan)
+            else:
+                self.scheduler = SlidingSplitScheduler(self.plan)
+        else:
+            self.scheduler = FixedSplitScheduler(self.plan)
+
+        self.opt = sgd(ecfg.lr)
+        self.params = model.init(jax.random.PRNGKey(ecfg.seed))
+        self.clock = 0.0
+        self.comm = 0.0
+        self.history = []          # per round dicts
+        self._hists = {cid: self._client_hist(cid) for cid in data}
+        self._key = jax.random.PRNGKey(ecfg.seed + 1)
+
+        # jit caches
+        self._client_fwd = {}
+        self._server_step = {}
+        self._client_upd = {}
+        self._fedavg_step = None
+
+    # ------------------------------------------------------------------ data
+    def _client_hist(self, cid):
+        d = self.data[cid]
+        labels = d["y"] if "y" in d else d["labels"]
+        return label_histogram(labels, self.ecfg.n_classes)
+
+    def _sample_batch(self, cid):
+        d = self.data[cid]
+        n = len(d["y"] if "y" in d else d["labels"])
+        idx = self.rng.choice(n, size=min(self.ecfg.batch_size, n),
+                              replace=n < self.ecfg.batch_size)
+        return {k: jnp.asarray(v[idx]) for k, v in d.items()}
+
+    def _data_size(self, cid):
+        d = self.data[cid]
+        return float(len(d["y"] if "y" in d else d["labels"]))
+
+    # ------------------------------------------------------- jitted pieces
+    def _get_client_fwd(self, split):
+        if split not in self._client_fwd:
+            m = self.model
+            self._client_fwd[split] = jax.jit(
+                lambda p, b: m.client_forward(p, b, split))
+        return self._client_fwd[split]
+
+    def _get_server_step(self, splits):
+        """splits: tuple of splits of group members (static). Returns fn
+        (server_params, feats_list, batches_list) ->
+        (loss, server_grads, [dfx_i])."""
+        if splits not in self._server_step:
+            m = self.model
+
+            def loss_fn(sp, feats_list, batches):
+                losses = []
+                for s, f, b in zip(splits, feats_list, batches):
+                    l, _ = m.server_loss(sp, f, b, s)
+                    losses.append(l)
+                # Eq. 3: loss = UNION of per-client losses -> SUM. A mean
+                # halves per-client gradients vs SFL's singleton groups
+                # and measurably slows S²FL (EXPERIMENTS §Accuracy).
+                return jnp.sum(jnp.stack(losses))
+
+            def step(sp, feats_list, batches):
+                val, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+                    sp, feats_list, batches)
+                return val, grads[0], grads[1]
+
+            self._server_step[splits] = jax.jit(step)
+        return self._server_step[splits]
+
+    def _get_client_update(self, split):
+        """vjp through client_forward with cotangent dfx; SGD update."""
+        if split not in self._client_upd:
+            m = self.model
+            lr = self.ecfg.lr
+
+            def upd(p, batch, dfx):
+                _, vjp = jax.vjp(lambda pp: m.client_forward(pp, batch,
+                                                             split), p)
+                (g,) = vjp(dfx)
+                return jax.tree.map(
+                    lambda w, gw: (w - lr * gw.astype(w.dtype)
+                                   ).astype(w.dtype), p, g)
+
+            self._client_upd[split] = jax.jit(upd)
+        return self._client_upd[split]
+
+    # ------------------------------------------------------------- rounds
+    def run_round(self):
+        ecfg = self.ecfg
+        participants = list(self.rng.choice(
+            sorted(self.data), size=min(ecfg.clients_per_round,
+                                        len(self.data)), replace=False))
+        if ecfg.mode == "fedavg":
+            return self._fedavg_round(participants)
+        return self._sfl_round(participants)
+
+    def _sfl_round(self, participants):
+        ecfg = self.ecfg
+        splits = self.scheduler.select(participants)
+
+        # Step 5: grouping (Eq. 2) — balance on, else singleton groups
+        if ecfg.mode == "s2fl" and ecfg.use_balance:
+            groups = greedy_groups([self._hists[c] for c in participants],
+                                   ecfg.group_size)
+            groups = [tuple(participants[i] for i in g) for g in groups]
+        else:
+            groups = [(c,) for c in participants]
+        gid_of = {c: gi for gi, g in enumerate(groups) for c in g}
+
+        client_params = {c: self.params for c in participants}
+        server_copies = {gi: self.params for gi in range(len(groups))}
+
+        for _ in range(ecfg.local_steps):
+            for gi, group in enumerate(groups):
+                batches = [self._sample_batch(c) for c in group]
+                feats = [self._get_client_fwd(splits[c])(client_params[c], b)
+                         for c, b in zip(group, batches)]
+                gsplits = tuple(splits[c] for c in group)
+                loss, sgrads, dfxs = self._get_server_step(gsplits)(
+                    server_copies[gi], feats, batches)
+                # W_s update (Eq. 4)
+                server_copies[gi] = jax.tree.map(
+                    lambda w, g: (w - ecfg.lr * g.astype(w.dtype)
+                                  ).astype(w.dtype),
+                    server_copies[gi], sgrads)
+                # Steps 7/8: dfx back to each device
+                for c, b, dfx in zip(group, batches, dfxs):
+                    client_params[c] = self._get_client_update(splits[c])(
+                        client_params[c], b, dfx)
+
+        # Step 9 + Alg. 1
+        states = [ClientState(cid=c, params=client_params[c],
+                              split=splits[c], data_size=self._data_size(c),
+                              group=gid_of[c]) for c in participants]
+        self.params = aggregate(self.model, states, server_copies)
+
+        # Eq. 1 clock
+        round_time, round_comm = self._tick(participants, splits)
+        self.scheduler.end_round()
+        self.history.append({"round": len(self.history),
+                             "clock": self.clock, "comm": self.comm,
+                             "loss": float(loss)})
+        return self.history[-1]
+
+    def _fedavg_round(self, participants):
+        ecfg = self.ecfg
+        if self._fedavg_step is None:
+            m = self.model
+
+            def step(p, batch):
+                (l, met), g = jax.value_and_grad(m.full_loss,
+                                                 has_aux=True)(p, batch)
+                new = jax.tree.map(
+                    lambda w, gw: (w - ecfg.lr * gw.astype(w.dtype)
+                                   ).astype(w.dtype), p, g)
+                return new, l
+
+            self._fedavg_step = jax.jit(step)
+
+        locals_, weights = [], []
+        loss = 0.0
+        for c in participants:
+            p = self.params
+            for _ in range(ecfg.local_steps):
+                p, l = self._fedavg_step(p, self._sample_batch(c))
+            locals_.append(p)
+            weights.append(self._data_size(c))
+            loss = float(l)
+        self.params = fedavg_aggregate(locals_, weights)
+
+        costs = flops_util.split_costs(self.model, self.model.n_units,
+                                       seq_len=self._seq_len())
+        p_n = ecfg.local_steps * ecfg.batch_size
+        times = {c: sim.fedavg_round_time(
+            self.dev_by_id[c], w_size=costs["w_size"], p=p_n,
+            f_full=costs["f_full"]) for c in participants}
+        self.clock += max(times.values())
+        self.comm += sum(sim.fedavg_round_comm(w_size=costs["w_size"])
+                         for _ in participants)
+        self.scheduler.end_round()
+        self.history.append({"round": len(self.history),
+                             "clock": self.clock, "comm": self.comm,
+                             "loss": loss})
+        return self.history[-1]
+
+    def _seq_len(self):
+        if self.model.is_cnn:
+            return 0
+        any_d = next(iter(self.data.values()))
+        return any_d["tokens"].shape[1]
+
+    def _tick(self, participants, splits):
+        ecfg = self.ecfg
+        p_n = ecfg.local_steps * ecfg.batch_size
+        times, comms = {}, 0.0
+        if getattr(self.scheduler, "warming_up", False):
+            # §3.1: warm-up Wc is dispatched to ALL devices, so the Eq.-1
+            # clock is observed for every device, not just participants.
+            s = self.scheduler.warmup_split()
+            costs = flops_util.split_costs(self.model, s,
+                                           seq_len=self._seq_len())
+            for d in self.devices:
+                if d.cid in self.data and d.cid not in participants:
+                    t = sim.device_round_time(
+                        d, wc_size=costs["wc_size"],
+                        feat_size=costs["feat_size"], p=p_n,
+                        fc=p_n * costs["fc"], fs=p_n * costs["fs"])
+                    self.scheduler.observe(d.cid, s, t)
+        for c in participants:
+            costs = flops_util.split_costs(self.model, splits[c],
+                                           seq_len=self._seq_len())
+            t = sim.device_round_time(
+                self.dev_by_id[c], wc_size=costs["wc_size"],
+                feat_size=costs["feat_size"], p=p_n,
+                fc=p_n * costs["fc"], fs=p_n * costs["fs"])
+            times[c] = t
+            comms += sim.device_round_comm(
+                wc_size=costs["wc_size"], feat_size=costs["feat_size"],
+                p=p_n)
+            self.scheduler.observe(c, splits[c], t)
+        self.clock += max(times.values())
+        self.comm += comms
+        return max(times.values()), comms
+
+    # -------------------------------------------------------------- eval
+    def evaluate(self, test_data, batch_size: int = 256):
+        m = self.model
+        n = len(test_data["y"] if "y" in test_data else test_data["labels"])
+        correct, total, loss_sum = 0.0, 0, 0.0
+        eval_fn = jax.jit(functools.partial(m.full_loss, train=False))
+        for i in range(0, n, batch_size):
+            batch = {k: jnp.asarray(v[i:i + batch_size])
+                     for k, v in test_data.items()}
+            l, met = eval_fn(self.params, batch)
+            bsz = len(next(iter(batch.values())))
+            loss_sum += float(l) * bsz
+            if "acc" in met:
+                correct += float(met["acc"]) * bsz
+            total += bsz
+        return {"loss": loss_sum / total,
+                "acc": correct / total if correct else None}
+
+    def run(self, rounds: Optional[int] = None, eval_data=None,
+            eval_every: int = 10, verbose: bool = False):
+        for r in range(rounds or self.ecfg.rounds):
+            rec = self.run_round()
+            if eval_data is not None and (r + 1) % eval_every == 0:
+                rec.update(self.evaluate(eval_data))
+            if verbose:
+                print(rec)
+        return self.history

@@ -1,0 +1,140 @@
+"""Adaptive sliding model split strategy (§3.1).
+
+The Fed Server maintains a **client time table**: for every (client,
+split-point) pair, the measured wall time of a full training round with
+that client model portion. The first K rounds are a warm-up that traverses
+all K split points (all clients use the same split in a warm-up round).
+Afterwards, each round:
+
+  1. collect the participating clients' recorded times for every split
+     (x * K values), take the MEDIAN;
+  2. each client gets the split whose recorded time is closest to the
+     median (stragglers get small portions, fast devices big ones);
+  3. on round completion, the table is updated with the observed time
+     (EMA so drifting device load is tracked).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.split import SplitPlan
+
+
+@dataclasses.dataclass
+class ClientTimeTable:
+    """times[cid][split] = EMA of observed round times."""
+    ema: float = 0.5
+
+    def __post_init__(self):
+        self._t: dict = {}
+
+    def update(self, cid, split: int, t: float):
+        d = self._t.setdefault(cid, {})
+        d[split] = (1 - self.ema) * d[split] + self.ema * t \
+            if split in d else t
+
+    def get(self, cid, split: int):
+        return self._t.get(cid, {}).get(split)
+
+    def known_splits(self, cid):
+        return sorted(self._t.get(cid, {}))
+
+
+class SlidingSplitScheduler:
+    def __init__(self, plan: SplitPlan, ema: float = 0.5):
+        self.plan = plan
+        self.table = ClientTimeTable(ema=ema)
+        self.round = 0
+
+    @property
+    def warming_up(self) -> bool:
+        return self.round < self.plan.k
+
+    def warmup_split(self) -> int:
+        """§3.1: in the first K rounds the Fed Server sends the same split
+        to ALL devices (the warm-up populates the whole time table; the
+        engine/simulator observes every device's Eq.-1 time during these
+        rounds, not just the sampled participants')."""
+        return self.plan.split_points[self.round % self.plan.k]
+
+    def select(self, participants) -> dict:
+        """-> {cid: split} for this round."""
+        if self.warming_up:
+            s = self.warmup_split()
+            return {c: s for c in participants}
+        times = [self.table.get(c, s) for c in participants
+                 for s in self.plan.split_points
+                 if self.table.get(c, s) is not None]
+        if not times:                       # nothing measured yet: smallest
+            return {c: self.plan.smallest() for c in participants}
+        median = float(np.median(times))
+        out = {}
+        for c in participants:
+            known = [(s, self.table.get(c, s))
+                     for s in self.plan.split_points
+                     if self.table.get(c, s) is not None]
+            if not known:
+                out[c] = self.plan.smallest()
+                continue
+            out[c] = min(known, key=lambda st: abs(st[1] - median))[0]
+        return out
+
+    def observe(self, cid, split: int, t: float):
+        self.table.update(cid, split, t)
+
+    def end_round(self):
+        self.round += 1
+
+
+class MinTimeScheduler(SlidingSplitScheduler):
+    """BEYOND-PAPER variant: after warm-up each device picks the split
+    minimizing ITS OWN recorded time, instead of matching the median.
+
+    Rationale: the round wall-clock is max_i T_i, and per-device argmin
+    greedily minimizes every T_i, hence the max — median matching can
+    deliberately slow fast devices AND pick a slow split for stragglers
+    whose time curve is non-monotone in split size (small models with
+    large early feature maps, e.g. ResNet8/MobileNet — see
+    EXPERIMENTS.md §Perf-scheduler). Equalization (the paper's stated
+    goal) is a side effect of lowering everyone's time toward the same
+    floor, not an objective worth paying wall-clock for."""
+
+    def select(self, participants) -> dict:
+        if self.warming_up:
+            return super().select(participants)
+        out = {}
+        for c in participants:
+            known = [(s, self.table.get(c, s))
+                     for s in self.plan.split_points
+                     if self.table.get(c, s) is not None]
+            if not known:
+                out[c] = self.plan.smallest()
+            else:
+                out[c] = min(known, key=lambda st: st[1])[0]
+        return out
+
+
+class FixedSplitScheduler:
+    """SFL baseline / S²FL+B ablation: everyone trains the largest client
+    portion every round (the paper's SFL trains Wc_3)."""
+
+    def __init__(self, plan: SplitPlan, split: int | None = None):
+        self.plan = plan
+        self.split = split if split is not None else plan.largest()
+        self.round = 0
+        self.table = ClientTimeTable()
+
+    @property
+    def warming_up(self) -> bool:
+        return False
+
+    def select(self, participants):
+        return {c: self.split for c in participants}
+
+    def observe(self, cid, split, t):
+        self.table.update(cid, split, t)
+
+    def end_round(self):
+        self.round += 1

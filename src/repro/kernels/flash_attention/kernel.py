@@ -1,0 +1,129 @@
+"""Flash attention Pallas TPU kernel (causal / sliding-window, GQA).
+
+Schedule: grid (batch*kv_head*group, n_q_blocks, n_kv_blocks) with the kv
+axis innermost-sequential; online-softmax running max / denominator / output
+accumulator live in VMEM scratch across kv steps. Block shapes are
+MXU-aligned (128 multiples) when the problem shape allows.
+
+VMEM budget per step (bf16 inputs, f32 accum):
+  q (bq, D) + k,v (bk, D) + scratch m,l (bq,128 lanes) + acc (bq, D) f32
+  defaults bq=bk=128, D<=256  ->  well under the ~16 MB/core budget.
+
+Positions are implicit (q and k both start at position 0, contiguous) —
+this matches the train/prefill paths that call it. Fully-masked q blocks
+(outside a sliding window) are skipped via pl.when.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: int, bq: int, bk: int,
+                 nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # block-level skip: causal => skip blocks fully above the diagonal;
+    # window => skip blocks fully left of the window.
+    run = True
+    if causal:
+        run = k_start <= q_start + bq - 1
+    if window:
+        run = jnp.logical_and(run, k_start + bk - 1 >= q_start - window + 1) \
+            if causal else (k_start + bk - 1 >= q_start - window + 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                  # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= qpos >= kpos
+        if window:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_scr[:, 0] * alpha + p.sum(axis=-1)
+        v = v_ref[0].astype(jnp.float32)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[:, 0] = m_new
+        l_scr[:, 0] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        l = l_scr[:, 0]
+        l = jnp.where(l == 0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _pick_block(S: int, pref: int = 128) -> int:
+    for b in (pref, 256, 128, 64, 32, 16, 8):
+        if S % b == 0 and b <= S:
+            return b
+    return S
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "groups",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window: int = 0,
+                        groups: int = 1, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = True):
+    """q: (BHq, S, D) with BHq = B*K*G; k, v: (BK, T, D), BK = BHq//groups.
+
+    Returns (BHq, S, Dv). `groups` is the GQA group count G.
+    """
+    BH, S, D = q.shape
+    BK, T, Dv = v.shape[0], k.shape[1], v.shape[-1]
+    bq = _pick_block(S, block_q)
+    bk = _pick_block(T, block_k)
+    nq, nk = S // bq, T // bk
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_attn_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j, g=groups: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, Dv), lambda b, i, j, g=groups: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

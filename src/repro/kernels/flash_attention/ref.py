@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  groups: int = 1):
+    """q: (BHq, S, D); k, v: (BK, T, D); BHq = BK * groups."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    k = jnp.repeat(k, groups, axis=0)
+    v = jnp.repeat(v, groups, axis=0)
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows -> 0 (matches kernel's l==0 guard)
+    any_valid = mask.any(axis=-1)
+    w = jnp.where(any_valid[None, :, None], w, 0.0)
+    return jnp.einsum("bst,btd->bsd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.moe_gmm.ops import expert_ffn, moe_gmm

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the grouped expert-FFN kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gmm_ref(x, wg, wu, wd, *, act: str = "silu"):
+    """x: (E, C, d); wg/wu: (E, d, F); wd: (E, F, d) -> (E, C, d)."""
+    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+    xf = x.astype(jnp.float32)
+    g = actf(jnp.einsum("ecd,edf->ecf", xf, wg.astype(jnp.float32)))
+    u = jnp.einsum("ecd,edf->ecf", xf, wu.astype(jnp.float32))
+    y = jnp.einsum("ecf,efd->ecd", g * u, wd.astype(jnp.float32))
+    return y.astype(x.dtype)

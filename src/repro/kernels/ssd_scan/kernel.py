@@ -1,0 +1,109 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+Grid: (batch, heads, n_chunks) with the chunk axis innermost-sequential;
+the inter-chunk SSM state (P x N, f32) is carried in VMEM scratch across
+chunk steps (TPU grid iteration is sequential, so scratch persists).
+
+Per chunk step (l = chunk length):
+  1. intra-chunk quadratic term  y_diag = (L ∘ C Bᵀ) (dt ∘ x)
+  2. inter-chunk contribution    y_off  = exp(cumsum dA) * (C state)
+  3. state update                state  = exp(sum dA) * state + tailᵀ x
+
+VMEM per step: x (l,P) + B,C (l,N) + L (l,l) f32 + state (P,N) f32 —
+with l=128, P=64..128, N=64..128 this is < 0.5 MB, comfortably in VMEM;
+the MXU sees (l,l)x(l,P) and (l,N)x(N,P) matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, init_ref,
+                y_ref, fs_ref, state_scr, *, l: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = init_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)               # (l, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)             # (l,)
+    A = a_ref[0]                                         # scalar
+    B = b_ref[0].astype(jnp.float32)                     # (l, N)
+    C = c_ref[0].astype(jnp.float32)                     # (l, N)
+
+    dA = dt * A                                          # (l,) <= 0
+    cs = jnp.cumsum(dA)                                  # (l,)
+
+    # intra-chunk: L[i,j] = exp(cs_i - cs_j) for j <= i
+    seg = cs[:, None] - cs[None, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (l, l), 1))
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    W = L * scores                                       # (l, l)
+    xdt = x * dt[:, None]                                # (l, P)
+    y = jax.lax.dot_general(W, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: y += exp(cs) * (C @ state^T)   state: (P, N)
+    state = state_scr[...]
+    y_off = jax.lax.dot_general(C, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y = y + y_off * jnp.exp(cs)[:, None]
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    # state update: state = exp(sum dA) * state + sum_m tail_m dt_m x_m B_m
+    tail = jnp.exp(cs[-1] - cs) * dt                     # (l,)
+    upd = jax.lax.dot_general(x, B * tail[:, None],
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state_scr[...] = state * jnp.exp(cs[-1]) + upd
+
+    @pl.when(ci == nc - 1)
+    def _done():
+        fs_ref[0, 0] = state_scr[...].astype(fs_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x, dt, A, B, C, *, chunk: int = 128,
+                    initial_state=None, interpret: bool = True):
+    """x: (b,s,h,p), dt: (b,s,h), A: (h,), B/C: (b,s,n).
+    Returns (y (b,s,h,p), final_state (b,h,p,n)). s % chunk == 0."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), x.dtype)
+
+    kernel = functools.partial(_ssd_kernel, l=chunk, nc=nc)
+    y, fs = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), B, C, initial_state)
+    return y, fs

@@ -1,0 +1,3 @@
+"""Oracle for the SSD scan kernel = the model's pure-jnp chunked dual form
+(itself validated against the sequential recurrence in tests)."""
+from repro.models.ssm import ssd_scan_ref  # noqa: F401

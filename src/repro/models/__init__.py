@@ -1,0 +1,3 @@
+from repro.models.api import SplitModel, get_subtree
+
+__all__ = ["SplitModel", "get_subtree"]

@@ -1,0 +1,184 @@
+"""The paper's CNN families (ResNet8 / VGG16 / MobileNet, CIFAR-scale),
+as sequential unit stacks so the S²FL sliding split applies at unit
+granularity (the paper's three split layers are unit indices).
+
+BatchNorm is the stateless, batch-statistics form (standard in FL
+reproductions — running stats don't aggregate across clients; noted in
+DESIGN/EXPERIMENTS).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef, abstract_params, init_params
+
+_NONE4 = ("none",) * 4
+
+
+def _conv_defs(k, cin, cout, name="w"):
+    return {name: ParamDef((k, k, cin, cout), _NONE4, init="conv")}
+
+
+def _bn_defs(c):
+    return {"scale": ParamDef((c,), ("none",), init="ones"),
+            "bias": ParamDef((c,), ("none",), init="zeros")}
+
+
+def _conv(p, x, stride=1, groups=1, name="w"):
+    return jax.lax.conv_general_dilated(
+        x, p[name].astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def _bn(p, x, eps=1e-5):
+    mean = x.mean(axis=(0, 1, 2), keepdims=True)
+    var = x.var(axis=(0, 1, 2), keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + eps)
+    return xn * p["scale"] + p["bias"]
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+# ---------------------------------------------------------------------------
+# unit builders per family: each unit -> (defs, apply_fn, out_shape_fn)
+# ---------------------------------------------------------------------------
+def _resnet_units(cfg):
+    units = []
+    c_in = cfg.in_channels
+
+    def stem_defs(c_in=c_in):
+        return {"conv": _conv_defs(3, c_in, 16), "bn": _bn_defs(16)}
+
+    def stem_apply(p, x):
+        return jax.nn.relu(_bn(p["bn"], _conv(p["conv"], x)))
+
+    units.append((stem_defs(), stem_apply))
+    c_prev = 16
+    for c, n_blocks, stride in cfg.stages:
+        for b in range(n_blocks):
+            s = stride if b == 0 else 1
+            proj = (s != 1) or (c_prev != c)
+
+            def blk_defs(c_prev=c_prev, c=c, proj=proj):
+                d = {"conv1": _conv_defs(3, c_prev, c), "bn1": _bn_defs(c),
+                     "conv2": _conv_defs(3, c, c), "bn2": _bn_defs(c)}
+                if proj:
+                    d["proj"] = _conv_defs(1, c_prev, c)
+                return d
+
+            def blk_apply(p, x, s=s, proj=proj):
+                h = jax.nn.relu(_bn(p["bn1"], _conv(p["conv1"], x, s)))
+                h = _bn(p["bn2"], _conv(p["conv2"], h))
+                skip = _conv(p["proj"], x, s) if proj else x
+                return jax.nn.relu(h + skip)
+
+            units.append((blk_defs(), blk_apply))
+            c_prev = c
+    return units, c_prev
+
+
+def _vgg_units(cfg):
+    units = []
+    c_prev = cfg.in_channels
+    for si, (c, n_convs) in enumerate(cfg.stages):
+        for ci in range(n_convs):
+            last = ci == n_convs - 1
+
+            def u_defs(c_prev=c_prev, c=c):
+                return {"conv": _conv_defs(3, c_prev, c), "bn": _bn_defs(c)}
+
+            def u_apply(p, x, last=last):
+                h = jax.nn.relu(_bn(p["bn"], _conv(p["conv"], x)))
+                return _maxpool(h) if last else h
+
+            units.append((u_defs(), u_apply))
+            c_prev = c
+    return units, c_prev
+
+
+def _mobilenet_units(cfg):
+    units = []
+
+    def stem_defs():
+        return {"conv": _conv_defs(3, cfg.in_channels, 32),
+                "bn": _bn_defs(32)}
+
+    def stem_apply(p, x):
+        return jax.nn.relu(_bn(p["bn"], _conv(p["conv"], x, 1)))
+
+    units.append((stem_defs(), stem_apply))
+    c_prev = 32
+    for c, stride in cfg.stages:
+        def u_defs(c_prev=c_prev, c=c):
+            return {"dw": _conv_defs(3, 1, c_prev, "w"),
+                    "bn1": _bn_defs(c_prev),
+                    "pw": _conv_defs(1, c_prev, c), "bn2": _bn_defs(c)}
+
+        def u_apply(p, x, stride=stride, c_prev=c_prev):
+            h = jax.lax.conv_general_dilated(
+                x, p["dw"]["w"].astype(x.dtype), (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=c_prev)
+            h = jax.nn.relu(_bn(p["bn1"], h))
+            h = jax.nn.relu(_bn(p["bn2"], _conv(p["pw"], h)))
+            return h
+
+        units.append((u_defs(), u_apply))
+        c_prev = c
+    return units, c_prev
+
+
+_BUILDERS = {"resnet": _resnet_units, "vgg": _vgg_units,
+             "mobilenet": _mobilenet_units}
+
+
+def cnn_units(cfg):
+    return _BUILDERS[cfg.family](cfg)
+
+
+def cnn_defs(cfg):
+    units, c_final = cnn_units(cfg)
+    return {
+        "units": [d for d, _ in units],
+        "head": {"w": ParamDef((c_final, cfg.n_classes), ("none", "none")),
+                 "b": ParamDef((cfg.n_classes,), ("none",), init="zeros")},
+    }
+
+
+def init_cnn(cfg, key):
+    return init_params(cnn_defs(cfg), key, cfg.param_dtype)
+
+
+def abstract_cnn(cfg):
+    return abstract_params(cnn_defs(cfg), cfg.param_dtype)
+
+
+def cnn_apply_range(cfg, params, x, lo: int, hi: int):
+    units, _ = cnn_units(cfg)
+    for i in range(lo, hi):
+        x = units[i][1](params["units"][i], x)
+    return x
+
+
+def cnn_head(cfg, params, x):
+    x = x.mean(axis=(1, 2))                               # global avg pool
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def cnn_n_units(cfg):
+    return len(_BUILDERS[cfg.family](cfg)[0])
+
+
+def cnn_loss(cfg, params, batch):
+    """batch: {'x': (B,H,W,C), 'y': (B,)}"""
+    h = cnn_apply_range(cfg, params, batch["x"], 0, cnn_n_units(cfg))
+    logits = cnn_head(cfg, params, h)
+    onehot = jax.nn.one_hot(batch["y"], cfg.n_classes)
+    ce = -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    return ce, {"ce": ce, "acc": acc}

@@ -1,0 +1,117 @@
+"""Parameter definition machinery.
+
+Every module declares its parameters ONCE as a pytree of ``ParamDef``
+(shape + logical axes + init kind). From that single source we derive:
+
+- ``init_params``     — materialized arrays (seeded, correct dtype)
+- ``abstract_params`` — ShapeDtypeStructs for the no-allocation dry-run
+- ``param_specs``     — PartitionSpecs via logical-axis -> mesh-axis rules
+
+Logical axis names used across the model zoo:
+  embed, vocab, heads, kv_heads, head_dim, ff, experts, expert_ff,
+  ssm_inner, ssm_state, ssm_heads, conv_k, lora, rope_dim, none
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class ParamDef(NamedTuple):
+    shape: tuple
+    axes: tuple                 # logical axis name per dim
+    init: str = "fan_in"        # fan_in | normal | zeros | ones | ssm_a | ssm_dt
+    scale: float = 0.02
+    dtype: str = ""             # '' -> model param_dtype
+
+    def nbytes(self, default_dtype: str) -> int:
+        dt = jnp.dtype(self.dtype or default_dtype)
+        return math.prod(self.shape) * dt.itemsize
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn, defs):
+    return jax.tree.map(fn, defs, is_leaf=is_def)
+
+
+def _materialize(d: ParamDef, key, param_dtype: str):
+    dtype = jnp.dtype(d.dtype or param_dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "normal":
+        return (jax.random.normal(key, d.shape, jnp.float32) * d.scale).astype(dtype)
+    if d.init == "fan_in":
+        fan_in = d.shape[0] if d.shape else 1
+        std = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dtype)
+    if d.init == "conv":         # HWIO conv weight: fan_in = H*W*I
+        fan_in = math.prod(d.shape[:-1]) if len(d.shape) > 1 else 1
+        std = math.sqrt(2.0 / max(fan_in, 1))
+        return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dtype)
+    if d.init == "ssm_a":        # A_log: A in [1, 16]
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if d.init == "ssm_dt":       # dt_bias: softplus^-1(dt), dt in [1e-3, 1e-1]
+        u = jax.random.uniform(key, d.shape, jnp.float32, math.log(1e-3),
+                               math.log(1e-1))
+        dt = jnp.exp(u)
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    raise ValueError(f"unknown init {d.init!r}")
+
+
+def init_params(defs, key, param_dtype: str = "float32"):
+    """Materialize a ParamDef tree into arrays with per-leaf fold_in keys."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = [_materialize(d, k, param_dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs, param_dtype: str = "float32"):
+    """ShapeDtypeStruct tree (no allocation) for lowering."""
+    return tree_map_defs(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype or param_dtype)),
+        defs)
+
+
+def param_specs(defs, rules: dict):
+    """PartitionSpec tree from logical-axis rules {logical: mesh_axis|None}.
+
+    A mesh axis may be claimed by at most one dim per param; later dims
+    fall back to replication if the axis is already used.
+    """
+    def to_spec(d: ParamDef):
+        used = set()
+        spec = []
+        for ax, size in zip(d.axes, d.shape):
+            m = rules.get(ax)
+            if m is None or m in used or size == 0:
+                spec.append(None)
+                continue
+            msize = rules.get(("_size", m), 0)
+            if msize and size % msize != 0:
+                spec.append(None)
+                continue
+            used.add(m)
+            spec.append(m)
+        return P(*spec)
+    return tree_map_defs(to_spec, defs)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(math.prod(d.shape) for d in leaves)
+
+
+def param_bytes(defs, param_dtype: str) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(d.nbytes(param_dtype) for d in leaves)

@@ -1,0 +1,119 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+One `model` (tensor/expert-parallel) axis, one `data` axis (cohort/data
+parallel; also the FSDP axis for trillion-scale expert FFNs), optional
+`pod` axis (replica aggregation across pods). ``param_specs`` in
+repro.models.params enforces per-param single-claim + divisibility, so the
+rules here can be declared optimistically.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def mesh_rules(cfg, mesh: Mesh) -> dict:
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    rules = {
+        "embed": None,
+        "vocab": "model",
+        "ff": "model",
+        "heads": "model",
+        # KV weights replicate when n_kv doesn't divide the model axis
+        # (param_specs skips non-divisible dims); sharding head_dim instead
+        # was tried and causes SPMD involuntary remats at the GQA einsum
+        # (q heads sharded vs k head_dim sharded) — see EXPERIMENTS.md §Perf.
+        "kv_heads": "model",
+        "head_dim": None,
+        "experts": "model",
+        "expert_ff": "data" if cfg.fsdp_ff else "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "conv_k": None,
+        "lora": None,
+        "rope_dim": None,
+        "none": None,
+    }
+    for ax, size in axis_sizes.items():
+        rules[("_size", ax)] = size
+    return rules
+
+
+def data_axes(mesh: Mesh):
+    """Mesh axes the global batch shards over."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def model_param_specs(cfg, mesh: Mesh):
+    from repro.models.params import param_specs
+    from repro.models.transformer import model_defs
+    return param_specs(model_defs(cfg), mesh_rules(cfg, mesh))
+
+
+def batch_spec(mesh: Mesh, ndim: int, *, batch_size: int | None = None):
+    """P(batch_sharded, None, ...) — falls back to replicated batch when the
+    global batch doesn't divide the data axes (e.g. long_500k B=1)."""
+    dp = data_axes(mesh)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in dp:
+        n *= axis_sizes[a]
+    first = dp if (batch_size is None or batch_size % n == 0) else None
+    return P(first, *([None] * (ndim - 1)))
+
+
+def cache_specs(cfg, mesh: Mesh, caches_abstract, batch: int):
+    """Sharding for decode caches: batch over data axes when divisible,
+    otherwise shard the sequence dim (long-context, batch=1) — see
+    DESIGN.md §6. SSM states / window ring buffers stay tiny: batch or
+    replicated."""
+    dp = data_axes(mesh)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    mdl = axis_sizes.get("model", 1)
+    n = 1
+    for a in dp:
+        n *= axis_sizes[a]
+    batch_ok = batch % n == 0
+
+    def model_dim(arr):
+        """Pick the cache dim to shard over `model`: kv heads (dim 2 of
+        (B,S,K,D)) when divisible, else head_dim; MLA latent rank (dim 2
+        of (B,S,R)); SSM heads (dim 1 of (B,H,P,N)). Without this, decode
+        caches replicate model-axis-wide: stablelm decode_32k measured
+        86.6 GB/chip -> 5.6 GB after (EXPERIMENTS.md §Perf-cache)."""
+        if arr.ndim == 4 and arr.shape[2] % mdl == 0:
+            return 2
+        if arr.ndim == 4 and arr.shape[3] % mdl == 0:
+            return 3
+        if arr.ndim == 3 and arr.shape[2] % mdl == 0:
+            return 2
+        return None
+
+    def spec_for(path_leaf):
+        name, arr = path_leaf
+        nd = arr.ndim
+        if nd == 1:                          # slot_pos
+            return P(None)
+        md = model_dim(arr) if name in ("k", "v", "latent") else None
+        spec = [None] * nd
+        if batch_ok:
+            spec[0] = dp
+        elif (name in ("k", "v", "latent", "k_rope")
+              and arr.shape[1] % n == 0):
+            # batch=1 long-context: shard the sequence dim instead
+            spec[1] = dp
+        if md is not None and spec[md] is None:
+            spec[md] = "model"
+        return P(*spec)
+
+    out = []
+    for layer in caches_abstract:
+        out.append({k: spec_for((k, v)) for k, v in layer.items()})
+    return out
+
+
+def shard_params(params, specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, specs)

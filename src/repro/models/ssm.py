@@ -1,0 +1,214 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked dual form for train/prefill (O(S * chunk) memory, matmul-friendly
+for the MXU) and O(1)-state recurrent decode. The pure-jnp chunked scan here
+is the oracle for the ``repro.kernels.ssd_scan`` Pallas kernel;
+``cfg.attn_impl == 'pallas'`` routes the core scan through the kernel.
+
+Single-group SSD: in_proj split into separate z / x / B / C / dt projections
+(separate params so the d_inner axes shard cleanly over the `model` mesh
+axis — see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+
+
+def ssm_defs(cfg):
+    d, di, N, Hs = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    ck = cfg.ssm_conv
+    return {
+        "wz": ParamDef((d, di), ("embed", "ssm_inner")),
+        "wx": ParamDef((d, di), ("embed", "ssm_inner")),
+        "wB": ParamDef((d, N), ("embed", "ssm_state")),
+        "wC": ParamDef((d, N), ("embed", "ssm_state")),
+        "wdt": ParamDef((d, Hs), ("embed", "ssm_heads")),
+        "conv_x": ParamDef((ck, di), ("conv_k", "ssm_inner"), init="normal",
+                           scale=0.5),
+        "conv_B": ParamDef((ck, N), ("conv_k", "ssm_state"), init="normal",
+                           scale=0.5),
+        "conv_C": ParamDef((ck, N), ("conv_k", "ssm_state"), init="normal",
+                           scale=0.5),
+        "A_log": ParamDef((Hs,), ("ssm_heads",), init="ssm_a", dtype="float32"),
+        "D": ParamDef((Hs,), ("ssm_heads",), init="ones", dtype="float32"),
+        "dt_bias": ParamDef((Hs,), ("ssm_heads",), init="ssm_dt",
+                            dtype="float32"),
+        "norm": ParamDef((di,), ("ssm_inner",), init="ones"),
+        "wo": ParamDef((di, d), ("ssm_inner", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+def _causal_conv(x, w, conv_state=None):
+    """x: (B,S,C), w: (k,C) depthwise causal conv. conv_state (B,k-1,C) is
+    the tail of the previous segment (decode); returns (y, new_state)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)              # (B, S+k-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (pure jnp oracle)
+# ---------------------------------------------------------------------------
+def _segsum(x):
+    """x: (..., L). Returns (..., L, L): sum_{j<i<=k} x_i lower-triangular
+    cumulative segment sums with -inf above diagonal."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    # out[k, j] = sum_{j < i <= k} x_i = cs[k] - cs[j]
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan_ref(x, dt, A, B, C, chunk: int, initial_state=None):
+    """SSD chunked dual form.
+
+    x:  (b, s, h, p)  inputs per head
+    dt: (b, s, h)     softplus-ed step sizes (>0)
+    A:  (h,)          negative decay rates
+    B:  (b, s, n)     input projection (single group)
+    C:  (b, s, n)     output projection
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    c, l = s // chunk, chunk
+    xc = x.reshape(b, c, l, h, p)
+    dtc = dt.reshape(b, c, l, h)
+    Bc = B.reshape(b, c, l, n)
+    Cc = C.reshape(b, c, l, n)
+
+    dA = dtc * A[None, None, None]                       # (b,c,l,h) <= 0
+    dA_cs = jnp.cumsum(dA, axis=2)                       # within-chunk cumsum
+
+    # 1) intra-chunk (quadratic within chunk)
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, 2, -1)))        # (b,c,h,l,l)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)       # (b,c,l,l)
+    W = L * scores[:, :, None, :, :]                     # (b,c,h,l,m)
+    y_diag = jnp.einsum("bchlm,bcmh,bcmhp->bclhp", W.astype(x.dtype),
+                        dtc.astype(x.dtype), xc)
+
+    # 2) chunk states: state_c = sum_m exp(sum_{i>m} dA_i) * dt_m B_m x_m
+    decay_tail = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)    # (b,c,l,h)
+    states = jnp.einsum("bclh,bcln,bclhp->bchpn",
+                        (decay_tail * dtc).astype(x.dtype), Bc, xc)
+
+    # 3) inter-chunk recurrence over c
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])            # (b,c,h)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), x.dtype)
+
+    def step(carry, inp):
+        st, dec = inp                                    # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None].astype(x.dtype) + st
+        return new, carry                                # emit PREVIOUS state
+
+    final, prev_states = jax.lax.scan(
+        step, initial_state,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (b,c,h,p,n)
+
+    # 4) inter-chunk output: y_off = C_l . (exp(dA_cs_l) * prev_state)
+    in_decay = jnp.exp(dA_cs)                            # (b,c,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states,
+                       in_decay.astype(x.dtype))
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """One-token recurrence. x: (b,1,h,p), dt: (b,1,h), B/C: (b,1,n),
+    state: (b,h,p,n). y = C . state' + (handled by caller: D skip)."""
+    dA = jnp.exp(dt[:, 0] * A[None])                     # (b,h)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0].astype(x.dtype), B[:, 0],
+                     x[:, 0])
+    state = state * dA[..., None, None].astype(x.dtype) + upd
+    y = jnp.einsum("bn,bhpn->bhp", C[:, 0], state)[:, None]
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+def init_ssm_cache(cfg, batch: int, dtype):
+    di, N, Hs, ck = (cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads,
+                     cfg.ssm_conv)
+    return {
+        "state": jnp.zeros((batch, Hs, cfg.ssm_head_dim, N), dtype),
+        "conv_x": jnp.zeros((batch, ck - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, ck - 1, N), dtype),
+        "conv_C": jnp.zeros((batch, ck - 1, N), dtype),
+    }
+
+
+def ssm_apply(cfg, p, x_in, cache=None):
+    """Mamba2 block. x_in: (B,S,d). Returns (out, new_cache)."""
+    from repro.models.layers import rmsnorm
+    B_, S, d = x_in.shape
+    Hs, P_, N = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z = x_in @ p["wz"].astype(x_in.dtype)
+    x = x_in @ p["wx"].astype(x_in.dtype)
+    Bp = x_in @ p["wB"].astype(x_in.dtype)
+    Cp = x_in @ p["wC"].astype(x_in.dtype)
+    dt_raw = x_in @ p["wdt"].astype(x_in.dtype)
+
+    cs_x = cache["conv_x"] if cache else None
+    cs_B = cache["conv_B"] if cache else None
+    cs_C = cache["conv_C"] if cache else None
+    x, ns_x = _causal_conv(x, p["conv_x"].astype(x.dtype), cs_x)
+    Bp, ns_B = _causal_conv(Bp, p["conv_B"].astype(x.dtype), cs_B)
+    Cp, ns_C = _causal_conv(Cp, p["conv_C"].astype(x.dtype), cs_C)
+    x, Bp, Cp = jax.nn.silu(x), jax.nn.silu(Bp), jax.nn.silu(Cp)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])     # (B,S,Hs) f32
+    A = -jnp.exp(p["A_log"])                             # (Hs,) negative
+    xh = x.reshape(B_, S, Hs, P_)
+
+    if cache is None or S > 1:
+        if S % cfg.ssm_chunk:
+            pad = cfg.ssm_chunk - S % cfg.ssm_chunk
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            B_p = jnp.pad(Bp, ((0, 0), (0, pad), (0, 0)))
+            C_p = jnp.pad(Cp, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xh_p, dt_p, B_p, C_p = xh, dt, Bp, Cp
+        init = cache["state"] if cache else None
+        if cfg.attn_impl == "pallas":
+            from repro.kernels.ssd_scan import ops as ssd_ops
+            y, state = ssd_ops.ssd_scan(xh_p, dt_p, A, B_p, C_p,
+                                        chunk=cfg.ssm_chunk,
+                                        initial_state=init)
+        else:
+            y, state = ssd_scan_ref(xh_p, dt_p, A, B_p, C_p,
+                                    chunk=cfg.ssm_chunk, initial_state=init)
+        y = y[:, :S]
+    else:
+        y, state = ssd_decode_step(xh, dt, A, Bp, Cp, cache["state"])
+
+    y = y + xh * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B_, S, cfg.d_inner)
+    y = rmsnorm({"scale": p["norm"]}, y, cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ p["wo"].astype(y.dtype)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": state, "conv_x": ns_x, "conv_B": ns_B,
+                     "conv_C": ns_C}
+    return out, new_cache

@@ -1,0 +1,88 @@
+"""Optimizers (built from scratch — no optax): SGD(+momentum), Adam,
+global-norm clipping, LR schedules. Functional (init, update) pairs over
+arbitrary pytrees. The paper trains everything with plain SGD lr=0.01
+(§5); Adam is provided for the beyond-paper training drivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable          # params -> state
+    update: Callable        # (params, grads, state, step) -> (params, state)
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else lr
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(params, grads, state, step=0):
+        eta = _lr_at(lr, step)
+        if momentum == 0.0:
+            new = jax.tree.map(
+                lambda p, g: (p - eta * g.astype(p.dtype)).astype(p.dtype),
+                params, grads)
+            return new, state
+        vel = jax.tree.map(lambda v, g: momentum * v + g.astype(v.dtype),
+                           state, grads)
+        new = jax.tree.map(lambda p, v: (p - eta * v).astype(p.dtype),
+                           params, vel)
+        return new, vel
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(params, grads, state, step=0):
+        eta = _lr_at(lr, step)
+        t = step + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) *
+                         g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        def upd(p, m_, v_):
+            mh = m_ / (1 - b1 ** t)
+            vh = v_ / (1 - b2 ** t)
+            step_ = eta * (mh / (jnp.sqrt(vh) + eps)
+                           + weight_decay * p.astype(jnp.float32))
+            return (p.astype(jnp.float32) - step_).astype(p.dtype)
+        new = jax.tree.map(upd, params, m, v)
+        return new, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    def lr(step):
+        w = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * w * cos
+    return lr

@@ -1,0 +1,165 @@
+"""Per-assigned-architecture smoke tests: instantiate the REDUCED variant
+of the same family (2 layers, d_model<=512, <=4 experts), run one forward
+and one train step on CPU, assert output shapes + finiteness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs, make_reduced
+from repro.models import SplitModel
+from repro.models.frontends import synth_frontend_embeds
+from repro.models.transformer import decode_step, forward, prefill
+
+LM_ARCHS = [a for a in list_configs()
+            if not hasattr(get_config(a), "family")]
+CNN_ARCHS = [a for a in list_configs() if hasattr(get_config(a), "family")]
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _lm_batch(cfg, B=2, S=32):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.frontend:
+        batch["prefix"] = synth_frontend_embeds(cfg, KEY, B)
+    return batch
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_reduced_forward_and_train_step(arch):
+    cfg = make_reduced(get_config(arch))
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512 and cfg.n_experts <= 4
+    model = SplitModel(cfg)
+    params = model.init(KEY)
+    batch = _lm_batch(cfg)
+    B, S = batch["tokens"].shape
+
+    logits, aux = forward(cfg, params, batch["tokens"], batch.get("prefix"))
+    P = cfg.n_frontend_tokens if cfg.frontend else 0
+    assert logits.shape == (B, P + S, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    # one full train step (loss + grad + SGD)
+    def loss_fn(p):
+        l, _ = model.full_loss(p, batch)
+        return l
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    new = jax.tree.map(lambda w, g: w - 0.01 * g.astype(w.dtype),
+                       params, grads)
+    loss2, _ = model.full_loss(new, batch)
+    assert np.isfinite(float(loss2))
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert gnorm > 0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_reduced_split_halves_match_full(arch):
+    cfg = make_reduced(get_config(arch))
+    model = SplitModel(cfg)
+    params = model.init(KEY)
+    batch = _lm_batch(cfg)
+    full, _ = model.full_loss(params, batch)
+    for split in (1, 2):
+        feats = model.client_forward(params, batch, split)
+        half, _ = model.server_loss(params, feats, batch, split)
+        np.testing.assert_allclose(float(full), float(half), rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_reduced_prefill_decode_consistency(arch):
+    cfg = make_reduced(get_config(arch))
+    if cfg.n_experts:
+        # MoE top-k routing flips under 1e-6 perturbations; covered by the
+        # dense archs — here we only check finiteness of the decode path.
+        pass
+    cfg = dataclasses.replace(cfg, param_dtype="float32")
+    model = SplitModel(cfg)
+    params = model.init(KEY)
+    B, S, G = 2, 24, 4
+    tokens = jax.random.randint(KEY, (B, S + G), 0, cfg.vocab_size)
+    logits_full, _ = forward(cfg, params, tokens)
+    lg, caches, _ = prefill(cfg, params, tokens[:, :S], max_len=S + G)
+    errs = [float(jnp.abs(lg[:, -1] - logits_full[:, S - 1]).max())]
+    for t in range(G):
+        lg, caches = decode_step(cfg, params, tokens[:, S + t:S + t + 1],
+                                 caches, jnp.asarray(S + t))
+        errs.append(float(jnp.abs(lg[:, 0] - logits_full[:, S + t]).max()))
+        assert np.isfinite(np.asarray(lg, np.float32)).all()
+    if not cfg.n_experts:
+        assert max(errs) < 1e-3, errs
+
+
+@pytest.mark.parametrize("arch", CNN_ARCHS)
+def test_cnn_smoke(arch):
+    cfg = get_config(arch)
+    model = SplitModel(cfg)
+    params = model.init(KEY)
+    x = jax.random.normal(KEY, (2, cfg.image_size, cfg.image_size,
+                                cfg.in_channels))
+    y = jnp.array([0, 1])
+    loss, met = model.full_loss(params, {"x": x, "y": y})
+    assert np.isfinite(float(loss))
+    # split halves agree
+    feats = model.client_forward(params, {"x": x, "y": y}, 1)
+    half, _ = model.server_loss(params, feats, {"x": x, "y": y}, 1)
+    np.testing.assert_allclose(float(loss), float(half), rtol=1e-5)
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact assigned hyperparameters."""
+    expect = {
+        "mamba2-2.7b": dict(n_layers=64, d_model=2560, vocab_size=50280,
+                            ssm_state=128),
+        "internlm2-1.8b": dict(n_layers=24, d_model=2048, n_heads=16,
+                               n_kv_heads=8, d_ff=8192, vocab_size=92544),
+        "musicgen-medium": dict(n_layers=48, d_model=1536, n_heads=24,
+                                n_kv_heads=24, d_ff=6144, vocab_size=2048),
+        "deepseek-v2-lite-16b": dict(n_layers=27, d_model=2048, n_heads=16,
+                                     vocab_size=102400, n_experts=64,
+                                     top_k=6, kv_lora_rank=512,
+                                     n_shared_experts=2, moe_d_ff=1408),
+        "h2o-danube-3-4b": dict(n_layers=24, d_model=3840, n_heads=32,
+                                n_kv_heads=8, d_ff=10240, vocab_size=32000),
+        "kimi-k2-1t-a32b": dict(n_layers=61, d_model=7168, n_heads=64,
+                                n_kv_heads=8, vocab_size=163840,
+                                n_experts=384, top_k=8, moe_d_ff=2048),
+        "gemma3-27b": dict(n_layers=62, d_model=5376, n_heads=32,
+                           n_kv_heads=16, d_ff=21504, vocab_size=262144),
+        "stablelm-3b": dict(n_layers=32, d_model=2560, n_heads=32,
+                            n_kv_heads=32, d_ff=6912, vocab_size=50304),
+        "zamba2-1.2b": dict(n_layers=38, d_model=2048, n_heads=32,
+                            n_kv_heads=32, d_ff=8192, vocab_size=32000,
+                            ssm_state=64),
+        "internvl2-1b": dict(n_layers=24, d_model=896, n_heads=14,
+                             n_kv_heads=2, d_ff=4864, vocab_size=151655),
+    }
+    for arch, fields in expect.items():
+        cfg = get_config(arch)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    # gemma3 pattern is 5 local : 1 global
+    g = get_config("gemma3-27b")
+    assert g.block_pattern.count("attn") * 5 <= g.block_pattern.count("swa") + 5
+    # kimi/deepseek first layer dense
+    assert get_config("kimi-k2-1t-a32b").ffn_pattern[0] == "dense"
+    assert get_config("deepseek-v2-lite-16b").ffn_pattern[0] == "dense"
+
+
+def test_remat_and_policy_preserve_loss():
+    """remat / remat_policy change memory/compute scheduling, never math."""
+    cfg = make_reduced(get_config("gemma3-27b"))
+    model = SplitModel(cfg)
+    params = model.init(KEY)
+    batch = _lm_batch(cfg)
+    base, _ = model.full_loss(params, batch)
+    for repl in (dict(remat=True), dict(remat=True, remat_policy="dots"),
+                 dict(remat=True, scan_layers=True)):
+        c2 = dataclasses.replace(cfg, **repl)
+        l2, _ = SplitModel(c2).full_loss(params, batch)
+        np.testing.assert_allclose(float(base), float(l2), rtol=1e-5), repl

@@ -1,0 +1,177 @@
+"""Integration tests: Algorithm-2 engine end-to-end (all three modes +
+ablations), and equivalence of the fused SPMD round step with the host
+engine at E=1."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, make_reduced
+from repro.core.engine import EngineConfig, S2FLEngine
+from repro.core.round_step import make_s2fl_loss, make_s2fl_train_step
+from repro.data.partition import federate
+from repro.data.synthetic import make_image_dataset, make_lm_dataset
+from repro.models import SplitModel
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cnn_setup(n=400, clients=6):
+    ds = make_image_dataset(n, seed=0)
+    fed = federate(ds, clients, alpha=0.3, seed=0)
+    model = SplitModel(get_config("resnet8"))
+    return model, fed, make_image_dataset(120, seed=9)
+
+
+@pytest.mark.parametrize("mode", ["s2fl", "sfl", "fedavg"])
+def test_engine_modes_run_and_learn(mode):
+    model, fed, test = _cnn_setup()
+    ecfg = EngineConfig(mode=mode, rounds=3, clients_per_round=4,
+                        batch_size=16, group_size=2, local_steps=1)
+    eng = S2FLEngine(model, fed, ecfg)
+    before = eng.evaluate(test)["loss"]
+    eng.run(rounds=3)
+    after = eng.evaluate(test)["loss"]
+    assert np.isfinite(after)
+    assert after < before + 0.15          # not diverging
+    assert eng.clock > 0 and eng.comm > 0
+    assert len(eng.history) == 3
+
+
+def test_engine_ablation_flags():
+    model, fed, _ = _cnn_setup(n=200, clients=4)
+    # S2FL+B (no sliding) and S2FL+M (no balance) both run
+    for kw in ({"use_sliding": False}, {"use_balance": False}):
+        ecfg = EngineConfig(mode="s2fl", rounds=2, clients_per_round=3,
+                            batch_size=8, **kw)
+        eng = S2FLEngine(model, fed, ecfg)
+        eng.run(rounds=2)
+        assert len(eng.history) == 2
+
+
+def test_scheduler_beats_fixed_split_on_vgg16_clock():
+    """Straggler mitigation (Table 3 regime): on VGG16, where |Wc| upload
+    dominates Eq. 1, the sliding split must cut the per-round wall time vs
+    SFL's fixed largest split. Pure Eq.-1 simulation (no training), exactly
+    how the paper's time numbers arise.
+
+    Note: on ResNet8 this does NOT hold — the model is tiny and early
+    feature maps are big, so small client portions increase feature-upload
+    time; see benchmarks/time_comm.py for the per-model discussion.
+    """
+    from repro.core.scheduler import SlidingSplitScheduler
+    from repro.core.simulation import device_round_time, make_device_grid
+    from repro.core.split import default_plan
+    from repro.utils.flops import split_costs
+
+    model = SplitModel(get_config("vgg16"))
+    plan = default_plan(model.n_units, k=3)
+    costs = {s: split_costs(model, s) for s in plan.split_points}
+    devices = make_device_grid(9, seed=0)
+    p = 32
+
+    def t_of(dev, s):
+        c = costs[s]
+        return device_round_time(dev, wc_size=c["wc_size"],
+                                 feat_size=c["feat_size"], p=p,
+                                 fc=p * c["fc"], fs=p * c["fs"])
+
+    # SFL: everyone trains the largest portion
+    sfl_wall = max(t_of(d, plan.largest()) for d in devices)
+
+    # S²FL: warm-up then median matching
+    sched = SlidingSplitScheduler(plan)
+    ids = [d.cid for d in devices]
+    for _ in range(plan.k):
+        sel = sched.select(ids)
+        for d in devices:
+            sched.observe(d.cid, sel[d.cid], t_of(d, sel[d.cid]))
+        sched.end_round()
+    sel = sched.select(ids)
+    s2_wall = max(t_of(d, sel[d.cid]) for d in devices)
+    assert s2_wall < sfl_wall
+    # and the spread of times tightens (the paper's equalization goal)
+    sfl_times = [t_of(d, plan.largest()) for d in devices]
+    s2_times = [t_of(d, sel[d.cid]) for d in devices]
+    assert (max(s2_times) - min(s2_times)) < (max(sfl_times)
+                                              - min(sfl_times))
+
+
+def test_engine_lm_arch():
+    """The engine drives an LM arch (split federated LM training)."""
+    cfg = make_reduced(get_config("internlm2-1.8b"))
+    ds = make_lm_dataset(240, seq_len=32, vocab=min(cfg.vocab_size, 256),
+                         seed=0)
+    fed = federate(ds, 4, alpha=0.5, seed=0)
+    model = SplitModel(cfg)
+    ecfg = EngineConfig(mode="s2fl", rounds=2, clients_per_round=3,
+                        batch_size=8, group_size=2)
+    eng = S2FLEngine(model, fed, ecfg)
+    eng.run(rounds=2)
+    assert np.isfinite(eng.history[-1]["loss"])
+
+
+def test_fused_round_step_matches_engine_e1():
+    """The pod-scale fused step (round_step.py) must reproduce the host
+    engine's E=1 round exactly: same grouping, same SGD update, same
+    aggregated params."""
+    cfg = make_reduced(get_config("internlm2-1.8b"))
+    model = SplitModel(cfg)
+    params = model.init(KEY)
+    split, n_groups, lr = 1, 2, 0.05
+    B, S = 8, 16
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    perm = jnp.asarray(np.random.default_rng(0).permutation(B), jnp.int32)
+    batch = {"tokens": tokens, "labels": labels, "perm": perm}
+
+    step = make_s2fl_train_step(cfg, split, n_groups, lr)
+    new_params, loss = jax.jit(step)(params, batch)
+
+    # manual reference: permute, split into groups, mean of group losses
+    def ref_loss(p):
+        feats = model.client_forward(p, {"tokens": tokens}, split)
+        h = feats["h"][perm]
+        t_p, l_p = tokens[perm], labels[perm]
+        gb = B // n_groups
+        losses = []
+        for g in range(n_groups):
+            sl = slice(g * gb, (g + 1) * gb)
+            l, _ = model.server_loss(
+                p, {"h": h[sl], "aux": jnp.zeros((), jnp.float32)},
+                {"tokens": t_p[sl], "labels": l_p[sl]}, split)
+            losses.append(l)
+        return jnp.mean(jnp.stack(losses)) + feats["aux"]
+
+    ref_l, ref_g = jax.value_and_grad(ref_loss)(params)
+    np.testing.assert_allclose(float(loss), float(ref_l), rtol=1e-5)
+    ref_new = jax.tree.map(lambda w, g: w - lr * g.astype(w.dtype),
+                           params, ref_g)
+    for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(ref_new)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-5)
+
+
+def test_fused_loss_balance_permutation_changes_groups():
+    """Different perms -> different group compositions -> different loss
+    (the mechanism actually routes features)."""
+    cfg = make_reduced(get_config("internlm2-1.8b"))
+    loss_fn = make_s2fl_loss(cfg, split=1, n_groups=2)
+    model = SplitModel(cfg)
+    params = model.init(KEY)
+    B, S = 8, 16
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    base = {"tokens": tokens, "labels": labels,
+            "perm": jnp.arange(B, dtype=jnp.int32)}
+    l1 = loss_fn(params, base)
+    # loss is mean over groups of per-group CE; permuting only relabels
+    # which rows are in which group, but CE is per-row -> overall mean
+    # equals ungrouped mean. Verify invariance (sanity of the fusion).
+    perm = jnp.asarray(np.random.default_rng(1).permutation(B), jnp.int32)
+    l2 = loss_fn(params, dict(base, perm=perm))
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)

@@ -1,0 +1,138 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gmm.kernel import moe_gmm
+from repro.kernels.moe_gmm.ref import moe_gmm_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.models.ssm import ssd_decode_step, ssd_scan_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+FA_CASES = [
+    # (BH, S, T, D, G, causal, window, dtype)
+    (4, 128, 128, 64, 1, True, 0, jnp.float32),
+    (4, 256, 256, 64, 2, True, 0, jnp.float32),
+    (2, 256, 256, 128, 1, True, 64, jnp.float32),
+    (6, 512, 512, 64, 3, False, 0, jnp.float32),
+    (2, 128, 128, 32, 1, True, 0, jnp.bfloat16),
+    (4, 384, 384, 64, 4, True, 128, jnp.float32),
+    (2, 64, 64, 96, 2, True, 0, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("BH,S,T,D,G,causal,window,dtype", FA_CASES)
+def test_flash_attention_sweep(BH, S, T, D, G, causal, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (BH, S, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (BH // G, T, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (BH // G, T, D), jnp.float32).astype(dtype)
+    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              groups=G, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window, groups=G)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)
+
+
+def test_flash_attention_model_layout_matches_xla_path():
+    from repro.models.attention import grouped_attention
+    B, S, H, K, D = 2, 128, 8, 4, 64
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    ref = grouped_attention(q, k, v, pos, pos, causal=True, impl="xla")
+    out = flash_attention(q, k, v, window=0, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+SSD_CASES = [
+    (2, 128, 4, 16, 8, 32, jnp.float32),
+    (1, 256, 2, 64, 32, 64, jnp.float32),
+    (2, 256, 3, 32, 16, 128, jnp.float32),
+    (1, 128, 2, 32, 16, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk,dtype", SSD_CASES)
+def test_ssd_scan_sweep(b, s, h, p, n, chunk, dtype):
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, n), jnp.float32).astype(dtype)
+    C = jax.random.normal(ks[4], (b, s, n), jnp.float32).astype(dtype)
+    init = (jax.random.normal(ks[5], (b, h, p, n), jnp.float32) * 0.1
+            ).astype(dtype)
+    y1, f1 = ssd_scan_pallas(x, dt, A, B, C, chunk=chunk,
+                             initial_state=init, interpret=True)
+    y2, f2 = ssd_scan_ref(x, dt, A, B, C, chunk=chunk, initial_state=init)
+    # bf16 inputs quantize intermediate states; rtol dominates there
+    atol, rtol = (0.1, 3e-2) if dtype == jnp.bfloat16 else (2e-4, 1e-5)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=atol,
+                               rtol=rtol)
+    np.testing.assert_allclose(np.asarray(f1, np.float32),
+                               np.asarray(f2, np.float32), atol=atol,
+                               rtol=rtol)
+
+
+def test_ssd_chunked_matches_sequential_recurrence():
+    """The oracle itself vs step-by-step recurrence (ground truth)."""
+    b, s, h, p, n = 2, 96, 4, 16, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    y_chunk, fs = ssd_scan_ref(x, dt, A, B, C, chunk=32)
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for t in range(s):
+        y, state = ssd_decode_step(x[:, t:t + 1], dt[:, t:t + 1], A,
+                                   B[:, t:t + 1], C[:, t:t + 1], state)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(y_chunk),
+                               np.asarray(jnp.concatenate(ys, 1)), atol=3e-4)
+    np.testing.assert_allclose(np.asarray(fs), np.asarray(state), atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# moe gmm
+# ---------------------------------------------------------------------------
+GMM_CASES = [
+    (4, 64, 128, 256, "silu", jnp.float32),
+    (2, 128, 64, 512, "gelu", jnp.float32),
+    (8, 32, 256, 128, "silu", jnp.float32),
+    (2, 64, 128, 256, "silu", jnp.bfloat16),
+    (3, 40, 96, 192, "gelu", jnp.float32),   # non-128 shapes
+]
+
+
+@pytest.mark.parametrize("E,C,d,F,act,dtype", GMM_CASES)
+def test_moe_gmm_sweep(E, C, d, F, act, dtype):
+    ks = jax.random.split(KEY, 4)
+    x = (jax.random.normal(ks[0], (E, C, d)) * 0.5).astype(dtype)
+    wg = (jax.random.normal(ks[1], (E, d, F)) * 0.05).astype(dtype)
+    wu = (jax.random.normal(ks[2], (E, d, F)) * 0.05).astype(dtype)
+    wd = (jax.random.normal(ks[3], (E, F, d)) * 0.05).astype(dtype)
+    y1 = moe_gmm(x, wg, wu, wd, act=act, interpret=True)
+    y2 = moe_gmm_ref(x, wg, wu, wd, act=act)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=atol)
