@@ -6,12 +6,19 @@ and comm per round are the quantities Eq. 1 defines).
 
 Reported: per-round wall time + comm for each method and the S²FL/SFL and
 S²FL/FedAvg speedups (the paper reports 3.54x time and 2.57x comm on VGG16
-at a=0.5)."""
+at a=0.5).
+
+Additionally (`sweep`): the repro.comm codec x link grid — for every
+payload codec (fp32 / bf16 / fp16 / int8) and link model (static Table-1
+vs trace-driven fading), the accumulated wire bytes and summed round
+time of an S²FL schedule, analytic Eq.-1 byte accounting as in
+comm/README.md."""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import Timer, emit
+from repro.comm import CommChannel, LinkTrace, StaticLink
 from repro.configs import get_config
 from repro.core.scheduler import SlidingSplitScheduler
 from repro.core.simulation import (device_round_comm, device_round_time,
@@ -89,7 +96,70 @@ def simulate(arch: str = "vgg16", *, n_devices: int = 100,
     return out
 
 
+def simulate_comm(arch: str = "resnet8", *, codec: str = "fp32",
+                  link=None, n_devices: int = 30, per_round: int = 10,
+                  rounds: int = 20, p: int = 128, seed: int = 0):
+    """S²FL schedule under a payload codec + link model: accumulated wire
+    bytes and summed Eq.-1 round time (analytic payloads — the channel's
+    estimate_round_payload — so the sweep runs in milliseconds).
+    Returns (sim_time_s, bytes, {cid: split} of the last round)."""
+    model = SplitModel(get_config(arch))
+    plan = default_plan(model.n_units, k=3)
+    costs = {s: split_costs(model, s) for s in plan.split_points}
+    devices = make_device_grid(n_devices, seed=seed)
+    ch = CommChannel(codec=codec, link=link or StaticLink())
+    sched = SlidingSplitScheduler(plan)
+    rng = np.random.default_rng(seed)
+
+    def t_and_bytes(dev, s, clock):
+        c = costs[s]
+        return ch.analytic_round_time(
+            dev, wc_size=c["wc_size"], n_values=p * c["feat_size"],
+            fc=p * c["fc"], fs=p * c["fs"], t=clock)
+
+    clock = comm = 0.0
+    sel = {}
+    for r in range(rounds):
+        part = rng.choice(devices, size=per_round, replace=False)
+        if sched.warming_up:
+            s = sched.warmup_split()
+            for d in devices:
+                sched.observe(d.cid, s, t_and_bytes(d, s, clock)[0])
+        sel = sched.select([d.cid for d in part])
+        times = {}
+        for d in part:
+            t, nbytes = t_and_bytes(d, sel[d.cid], clock)
+            times[d.cid] = t
+            comm += nbytes
+            sched.observe(d.cid, sel[d.cid], t)
+        clock += max(times.values())
+        sched.end_round()
+    return clock, comm, sel
+
+
+def sweep(arch: str = "resnet8"):
+    """codec x link grid -> per-cell bytes + round-time columns."""
+    links = {
+        "static": StaticLink(),
+        "trace": LinkTrace.fading(n_segments=8, period=600.0, lo=0.1,
+                                  hi=1.0, seed=3),
+    }
+    base = None
+    for codec in ("fp32", "bf16", "fp16", "int8"):
+        for lname, link in links.items():
+            with Timer() as t:
+                clock, nbytes, _ = simulate_comm(arch, codec=codec,
+                                                 link=link)
+            if codec == "fp32" and lname == "static":
+                base = nbytes
+            emit(f"comm_sweep.{arch}.{codec}.{lname}", t.us,
+                 f"bytes={nbytes:.3e};sim_round_time_s={clock:.1f};"
+                 f"bytes_vs_fp32={base / nbytes:.2f}x")
+
+
 def run():
+    for arch in ("vgg16", "resnet8", "mobilenet"):
+        sweep(arch)
     for arch in ("vgg16", "resnet8", "mobilenet"):
         with Timer() as t:
             res = simulate(arch)

@@ -39,4 +39,4 @@ print("initial:", engine.evaluate(test))
 engine.run()
 print("after 5 rounds:", engine.evaluate(test))
 print(f"simulated wall clock: {engine.clock:.1f}s, "
-      f"comm: {engine.comm:.3e} elements")
+      f"comm: {engine.comm:.3e} bytes")

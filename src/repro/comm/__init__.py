@@ -1,0 +1,27 @@
+"""repro.comm — pluggable transport for the cut-layer exchange.
+
+See README.md in this package for the design (codec interface,
+link-trace format, byte-accounting convention)."""
+from repro.comm.channel import AUX_BYTES, CommChannel  # noqa: F401
+from repro.comm.codecs import Codec, get_codec, list_codecs  # noqa: F401
+from repro.comm.links import LinkTrace, StaticLink, get_link  # noqa: F401
+
+
+def make_channel(ccfg=None) -> CommChannel:
+    """Build a CommChannel from a configs.base.CommConfig (None -> the
+    fp32/static default, which reproduces the seed's exact semantics)."""
+    if ccfg is None:
+        return CommChannel()
+    if ccfg.link == "trace":
+        if ccfg.trace_file:
+            link = LinkTrace.from_file(
+                ccfg.trace_file,
+                per_device_phase=ccfg.trace_phase_per_device)
+        else:
+            link = LinkTrace(ccfg.trace_times, ccfg.trace_multipliers,
+                             period=ccfg.trace_period,
+                             per_device_phase=ccfg.trace_phase_per_device)
+    else:
+        link = get_link(ccfg.link)
+    return CommChannel(codec=ccfg.codec, grad_codec=ccfg.grad_codec,
+                       link=link)

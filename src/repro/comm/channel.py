@@ -1,0 +1,98 @@
+"""CommChannel — the metered transport between devices and the Main
+Server.
+
+Everything that crosses the cut goes through here: uplink features
+(step 4 of Fig. 1) and downlink feature-gradients (step 7). The channel
+(a) applies the codec round-trip so the receiver trains on exactly what
+the wire delivered, and (b) meters exact payload bytes per direction and
+per device-round, which the engine's Eq.-1 tick converts to transfer
+time using the link model's rate at the current simulated clock.
+
+Byte convention (comm/README.md): payload bytes are exact from the
+encoded arrays; model dispatch/collection is fp32, i.e.
+``elements * BYTES_PER_ELEM`` — codecs apply to the cut-layer exchange
+only, matching the paper's Eq.-1 structure.
+"""
+from __future__ import annotations
+
+from repro.comm.codecs import Codec, get_codec
+from repro.comm.links import StaticLink
+
+AUX_BYTES = 4.0          # the scalar aux-loss rider on each feature msg
+
+
+class CommChannel:
+    def __init__(self, codec="fp32", grad_codec=None, link=None):
+        self.feature_codec = (codec if isinstance(codec, Codec)
+                              else get_codec(codec))
+        if grad_codec is None or grad_codec == "":
+            grad_codec = self.feature_codec.name
+        self.grad_codec = (grad_codec if isinstance(grad_codec, Codec)
+                           else get_codec(grad_codec))
+        self.link = link or StaticLink()
+        self.up_bytes = 0.0          # device -> server (features)
+        self.down_bytes = 0.0        # server -> device (dfx)
+        self._round = {}             # cid -> payload bytes this round
+
+    # ------------------------------------------------------------ wire
+    def _xfer(self, codec, cid, msg):
+        """msg: {'h': tensor, ...riders} or bare tensor."""
+        if isinstance(msg, dict):
+            h, nbytes = codec.roundtrip(msg["h"])
+            out = dict(msg, h=h)
+            nbytes += AUX_BYTES * (len(msg) - 1)
+        else:
+            out, nbytes = codec.roundtrip(msg)
+        self._round[cid] = self._round.get(cid, 0.0) + nbytes
+        return out, nbytes
+
+    def uplink_features(self, cid, feats):
+        """Device cid uploads its cut-layer features. Returns what the
+        server receives (codec round-trip applied)."""
+        out, nbytes = self._xfer(self.feature_codec, cid, feats)
+        self.up_bytes += nbytes
+        return out
+
+    def downlink_grads(self, cid, dfx):
+        """Server returns the feature gradient to device cid."""
+        out, nbytes = self._xfer(self.grad_codec, cid, dfx)
+        self.down_bytes += nbytes
+        return out
+
+    # ------------------------------------------------------- accounting
+    @property
+    def total_bytes(self) -> float:
+        return self.up_bytes + self.down_bytes
+
+    def round_payload(self, cid) -> float:
+        """Exact payload bytes metered for cid since the last reset."""
+        return self._round.get(cid, 0.0)
+
+    def reset_round(self):
+        self._round = {}
+
+    def estimate_round_payload(self, n_values: float,
+                               last_dim: int = 0) -> float:
+        """Analytic up+down payload bytes for n_values cut-layer elements
+        each way — for devices whose tensors are never materialized
+        (warm-up observation of non-participants)."""
+        return (self.feature_codec.estimate_bytes(n_values, last_dim)
+                + self.grad_codec.estimate_bytes(n_values, last_dim)
+                + 2 * AUX_BYTES)
+
+    def analytic_round_time(self, dev, *, wc_size: float, n_values: float,
+                            fc: float, fs: float, t: float):
+        """Eq.-1 device-round (time, bytes) from analytic payloads: the
+        single formula shared by the engine's warm-up branch, the
+        benchmark sweep, and the scheduler tests — change the payload
+        convention here and every consumer follows."""
+        from repro.core.simulation import (device_round_time_bytes,
+                                           model_dispatch_bytes)
+        nbytes = model_dispatch_bytes(wc_size=wc_size) \
+            + self.estimate_round_payload(n_values)
+        return device_round_time_bytes(dev, comm_bytes=nbytes, fc=fc,
+                                       fs=fs, rate=self.rate(dev, t)), \
+            nbytes
+
+    def rate(self, dev, t: float) -> float:
+        return self.link.rate(dev, t)

@@ -1,0 +1,125 @@
+"""Payload codecs for the cut-layer exchange (uplink features, downlink
+feature-gradients).
+
+A codec is a wire format: ``encode`` produces the payload that would
+cross the link (plus exact wire bytes), ``decode`` reconstructs the
+tensor the receiver trains on. The engine always trains on
+``decode(encode(x))`` so codec round-trip error is injected into the
+training path — compression is never free by construction.
+
+Byte accounting is exact per payload (see comm/README.md): element
+payload bytes + per-row metadata (int8: fp32 scale+zp per row) + a fixed
+4-byte aux scalar carried alongside each feature tensor.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.kernels.int8_quant import int8_dequantize, int8_quantize
+
+
+class Codec:
+    """Wire format for a single tensor. Subclasses set ``name`` and
+    ``bytes_per_value`` and implement encode/decode."""
+
+    name: str = "base"
+    bytes_per_value: float = 4.0
+    row_overhead_bytes: float = 0.0     # per-row metadata (scales etc.)
+
+    def encode(self, x):
+        """-> (payload, wire_bytes). payload is whatever decode needs."""
+        raise NotImplementedError
+
+    def decode(self, payload, dtype=jnp.float32):
+        raise NotImplementedError
+
+    def roundtrip(self, x):
+        """The tensor the receiver sees, plus exact wire bytes."""
+        payload, nbytes = self.encode(x)
+        return self.decode(payload, dtype=x.dtype), nbytes
+
+    def estimate_bytes(self, n_values: float, last_dim: int = 0) -> float:
+        """Analytic wire size for n_values elements (used by the Eq.-1
+        simulator for devices whose payloads are not materialized, e.g.
+        warm-up observation of non-participants)."""
+        rows = n_values / last_dim if last_dim else 1.0
+        return n_values * self.bytes_per_value \
+            + math.ceil(rows) * self.row_overhead_bytes
+
+
+class Fp32Codec(Codec):
+    name = "fp32"
+    bytes_per_value = 4.0
+
+    def encode(self, x):
+        return x, float(x.size) * self.bytes_per_value
+
+    def decode(self, payload, dtype=jnp.float32):
+        return payload.astype(dtype)
+
+
+class CastCodec(Codec):
+    """Lossy downcast (bf16 / fp16): halves the wire size."""
+    bytes_per_value = 2.0
+
+    def __init__(self, name: str, wire_dtype):
+        self.name = name
+        self.wire_dtype = wire_dtype
+
+    def encode(self, x):
+        return x.astype(self.wire_dtype), \
+            float(x.size) * self.bytes_per_value
+
+    def decode(self, payload, dtype=jnp.float32):
+        return payload.astype(dtype)
+
+
+class Int8Codec(Codec):
+    """Group-wise affine int8 via the Pallas kernel pair
+    (repro.kernels.int8_quant): 1 byte/value + 8 bytes per group of
+    QUANT_GROUP values (fp32 scale + zero point), ~3% metadata."""
+    name = "int8"
+    bytes_per_value = 1.0
+    row_overhead_bytes = 8.0
+
+    def encode(self, x):
+        q, scale, zp, shape = int8_quantize(x)
+        # the edge-padded tail group crosses the wire too — count it
+        nbytes = float(q.size) * self.bytes_per_value \
+            + float(q.shape[0]) * self.row_overhead_bytes
+        return (q, scale, zp, shape), nbytes
+
+    def decode(self, payload, dtype=jnp.float32):
+        q, scale, zp, shape = payload
+        return int8_dequantize(q, scale, zp, shape, dtype=dtype)
+
+    def estimate_bytes(self, n_values: float, last_dim: int = 0) -> float:
+        from repro.kernels.int8_quant.ops import GROUP
+        if not n_values:
+            return 0.0
+        # mirror _as_groups: tensors smaller than GROUP use one
+        # tensor-sized group, not a full padded one
+        g = min(GROUP, int(n_values))
+        groups = math.ceil(n_values / g)
+        return groups * (g * self.bytes_per_value
+                         + self.row_overhead_bytes)
+
+
+_CODECS = {
+    "fp32": Fp32Codec,
+    "bf16": lambda: CastCodec("bf16", jnp.bfloat16),
+    "fp16": lambda: CastCodec("fp16", jnp.float16),
+    "int8": Int8Codec,
+}
+
+
+def get_codec(name: str) -> Codec:
+    if name not in _CODECS:
+        raise KeyError(f"unknown codec {name!r}; known: {sorted(_CODECS)}")
+    return _CODECS[name]()
+
+
+def list_codecs():
+    return sorted(_CODECS)

@@ -1,0 +1,106 @@
+"""Link models — what transfer rate a device sees at simulated time t.
+
+``StaticLink`` is the paper's Table-1 regime (each device keeps its fixed
+elements/s rate forever). ``LinkTrace`` is trace-driven: a
+piecewise-constant multiplier schedule on top of each device's base rate,
+wrapped modulo a period, with an optional per-device phase so devices
+fade independently — rounds later in the Eq.-1 clock see different link
+quality, and the sliding scheduler's client time table tracks it.
+
+Trace format (see comm/README.md): ascending ``times`` anchors starting
+at 0.0 and same-length ``multipliers``; segment i covers
+[times[i], times[i+1]) and the last segment runs to ``period`` (default:
+``times[-1]`` extended by the previous segment's width, so the final
+multiplier always gets a non-empty segment). JSON traces are
+``{"times": [...], "multipliers": [...], "period": ...}``.
+"""
+from __future__ import annotations
+
+import bisect
+import json
+
+import numpy as np
+
+# Golden-ratio stride decorrelates per-device phases without RNG state.
+_PHI = 0.6180339887498949
+
+
+class StaticLink:
+    name = "static"
+
+    def rate(self, dev, t: float) -> float:
+        """elements/s for device ``dev`` at simulated time ``t``."""
+        return dev.rate
+
+
+class LinkTrace:
+    name = "trace"
+
+    def __init__(self, times, multipliers, *, period: float = 0.0,
+                 per_device_phase: bool = True):
+        times = [float(x) for x in times]
+        multipliers = [float(m) for m in multipliers]
+        if not times or len(times) != len(multipliers):
+            raise ValueError(
+                "LinkTrace needs same-length non-empty times/multipliers "
+                "(link='trace' requires trace_file or trace_times); got "
+                f"{len(times)} times, {len(multipliers)} multipliers")
+        if times[0] != 0.0 or times != sorted(times):
+            raise ValueError(f"trace times must ascend from 0.0: {times}")
+        if any(m <= 0 for m in multipliers):
+            raise ValueError(f"trace multipliers must be > 0: "
+                             f"{multipliers}")
+        self.times = times
+        self.multipliers = multipliers
+        if not period:
+            # the last anchor opens a segment too: extend it by the
+            # previous segment's width (period == times[-1] would make
+            # it zero-length and silently drop the final multiplier)
+            period = times[-1] + (times[-1] - times[-2]) \
+                if len(times) > 1 else 1.0
+        self.period = float(period)
+        if len(times) > 1 and self.period <= times[-1]:
+            raise ValueError(
+                f"period {self.period} must exceed the last anchor "
+                f"{times[-1]} or its multiplier would never apply")
+        self.per_device_phase = per_device_phase
+
+    def multiplier_at(self, t: float, phase: float = 0.0) -> float:
+        t = (t + phase) % self.period
+        i = bisect.bisect_right(self.times, t) - 1
+        return self.multipliers[max(i, 0)]
+
+    def _phase(self, cid) -> float:
+        if not self.per_device_phase:
+            return 0.0
+        return (int(cid) * _PHI % 1.0) * self.period
+
+    def rate(self, dev, t: float) -> float:
+        return dev.rate * self.multiplier_at(t, self._phase(dev.cid))
+
+    # ------------------------------------------------------------- io
+    @classmethod
+    def from_file(cls, path: str, **kw) -> "LinkTrace":
+        with open(path) as f:
+            spec = json.load(f)
+        return cls(spec["times"], spec["multipliers"],
+                   period=spec.get("period", 0.0), **kw)
+
+    @classmethod
+    def fading(cls, *, n_segments: int = 8, period: float = 400.0,
+               lo: float = 0.1, hi: float = 1.0, seed: int = 0,
+               per_device_phase: bool = True) -> "LinkTrace":
+        """Synthetic deep-fade trace: log-uniform multipliers in [lo, hi]."""
+        rng = np.random.default_rng(seed)
+        times = [period * i / n_segments for i in range(n_segments)]
+        mult = np.exp(rng.uniform(np.log(lo), np.log(hi), n_segments))
+        return cls(times, mult.tolist(), period=period,
+                   per_device_phase=per_device_phase)
+
+
+def get_link(name: str = "static", **kw):
+    if name == "static":
+        return StaticLink()
+    if name == "trace":
+        return LinkTrace(**kw)
+    raise KeyError(f"unknown link model {name!r}; known: static, trace")

@@ -131,6 +131,26 @@ class CNNConfig:
     param_dtype: str = "float32"
 
 
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    """Transport knobs for the cut-layer exchange (repro.comm).
+
+    ``codec`` compresses uplink features, ``grad_codec`` the downlink
+    feature-gradients ('' -> same as ``codec``). ``link`` selects the
+    rate model: 'static' (Table 1) or 'trace' (time-varying multiplier
+    schedule — inline via trace_* fields or a JSON file, see
+    comm/README.md)."""
+
+    codec: str = "fp32"                 # fp32 | bf16 | fp16 | int8
+    grad_codec: str = ""                # '' -> follow codec
+    link: str = "static"                # static | trace
+    trace_times: tuple = ()             # ascending, starts at 0.0
+    trace_multipliers: tuple = ()       # same length, > 0
+    trace_period: float = 0.0           # 0 -> trace_times[-1]
+    trace_phase_per_device: bool = True
+    trace_file: str = ""                # JSON overrides the inline trace
+
+
 def make_reduced(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 256,
                  vocab: int = 512) -> ModelConfig:
     """Reduced same-family variant for CPU smoke tests (<=2 layers,

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import make_channel
+from repro.configs.base import CommConfig
 from repro.core import simulation as sim
 from repro.core.aggregation import ClientState, aggregate, fedavg_aggregate
 from repro.core.balance import greedy_groups, label_histogram
@@ -50,6 +52,10 @@ class EngineConfig:
     split_k: int = 3
     seed: int = 0
     n_classes: int = 10
+    # transport: codecs + link model for the cut-layer exchange
+    # (repro.comm; fp32/static reproduces the seed's semantics, comm is
+    # accounted in bytes — see comm/README.md)
+    comm: CommConfig = dataclasses.field(default_factory=CommConfig)
 
 
 class S2FLEngine:
@@ -81,8 +87,9 @@ class S2FLEngine:
 
         self.opt = sgd(ecfg.lr)
         self.params = model.init(jax.random.PRNGKey(ecfg.seed))
+        self.channel = make_channel(ecfg.comm)
         self.clock = 0.0
-        self.comm = 0.0
+        self.comm = 0.0               # accumulated wire bytes
         self.history = []          # per round dicts
         self._hists = {cid: self._client_hist(cid) for cid in data}
         self._key = jax.random.PRNGKey(ecfg.seed + 1)
@@ -109,6 +116,14 @@ class S2FLEngine:
     def _data_size(self, cid):
         d = self.data[cid]
         return float(len(d["y"] if "y" in d else d["labels"]))
+
+    def _p_of(self, cid):
+        """Samples cid actually processes per round: _sample_batch
+        truncates to the client's data size, so Eq.-1 compute terms and
+        the warm-up payload estimate must truncate identically or the
+        time table would disagree with the metered post-warm-up times."""
+        return self.ecfg.local_steps * min(self.ecfg.batch_size,
+                                           int(self._data_size(cid)))
 
     # ------------------------------------------------------- jitted pieces
     def _get_client_fwd(self, split):
@@ -175,7 +190,9 @@ class S2FLEngine:
         splits = self.scheduler.select(participants)
 
         # Step 5: grouping (Eq. 2) — balance on, else singleton groups
-        if ecfg.mode == "s2fl" and ecfg.use_balance:
+        if not participants:
+            groups = []
+        elif ecfg.mode == "s2fl" and ecfg.use_balance:
             groups = greedy_groups([self._hists[c] for c in participants],
                                    ecfg.group_size)
             groups = [tuple(participants[i] for i in g) for g in groups]
@@ -186,36 +203,53 @@ class S2FLEngine:
         client_params = {c: self.params for c in participants}
         server_copies = {gi: self.params for gi in range(len(groups))}
 
-        for _ in range(ecfg.local_steps):
+        self.channel.reset_round()
+        group_losses = []              # last local step's per-group losses
+        for step_i in range(ecfg.local_steps):
             for gi, group in enumerate(groups):
                 batches = [self._sample_batch(c) for c in group]
-                feats = [self._get_client_fwd(splits[c])(client_params[c], b)
-                         for c, b in zip(group, batches)]
+                # Step 4: features cross the uplink (codec round-trip
+                # applied, exact wire bytes metered)
+                feats = [self.channel.uplink_features(
+                    c, self._get_client_fwd(splits[c])(client_params[c], b))
+                    for c, b in zip(group, batches)]
                 gsplits = tuple(splits[c] for c in group)
                 loss, sgrads, dfxs = self._get_server_step(gsplits)(
                     server_copies[gi], feats, batches)
+                if step_i == ecfg.local_steps - 1:
+                    group_losses.append(float(loss))
                 # W_s update (Eq. 4)
                 server_copies[gi] = jax.tree.map(
                     lambda w, g: (w - ecfg.lr * g.astype(w.dtype)
                                   ).astype(w.dtype),
                     server_copies[gi], sgrads)
-                # Steps 7/8: dfx back to each device
+                # Steps 7/8: dfx back to each device over the downlink
                 for c, b, dfx in zip(group, batches, dfxs):
+                    dfx = self.channel.downlink_grads(c, dfx)
                     client_params[c] = self._get_client_update(splits[c])(
                         client_params[c], b, dfx)
 
         # Step 9 + Alg. 1
-        states = [ClientState(cid=c, params=client_params[c],
-                              split=splits[c], data_size=self._data_size(c),
-                              group=gid_of[c]) for c in participants]
-        self.params = aggregate(self.model, states, server_copies)
+        if participants:
+            states = [ClientState(cid=c, params=client_params[c],
+                                  split=splits[c],
+                                  data_size=self._data_size(c),
+                                  group=gid_of[c]) for c in participants]
+            self.params = aggregate(self.model, states, server_copies)
 
         # Eq. 1 clock
         round_time, round_comm = self._tick(participants, splits)
         self.scheduler.end_round()
+        # Eq.-3 group losses are SUMS over members, so divide the total
+        # by the participant count: a per-client mean comparable across
+        # group sizes and with the FedAvg curve (not the last group's,
+        # which the seed reported); nan when no training happened
+        # (local_steps == 0 or no participants)
+        loss = (float(np.sum(group_losses)) / len(participants)
+                if group_losses else float("nan"))
         self.history.append({"round": len(self.history),
                              "clock": self.clock, "comm": self.comm,
-                             "loss": float(loss)})
+                             "loss": loss})
         return self.history[-1]
 
     def _fedavg_round(self, participants):
@@ -233,27 +267,31 @@ class S2FLEngine:
 
             self._fedavg_step = jax.jit(step)
 
-        locals_, weights = [], []
-        loss = 0.0
+        locals_, weights, losses = [], [], []
         for c in participants:
             p = self.params
+            l = None
             for _ in range(ecfg.local_steps):
                 p, l = self._fedavg_step(p, self._sample_batch(c))
             locals_.append(p)
             weights.append(self._data_size(c))
-            loss = float(l)
-        self.params = fedavg_aggregate(locals_, weights)
+            if l is not None:
+                losses.append(float(l))
+        if locals_:
+            self.params = fedavg_aggregate(locals_, weights)
 
         costs = flops_util.split_costs(self.model, self.model.n_units,
                                        seq_len=self._seq_len())
-        p_n = ecfg.local_steps * ecfg.batch_size
         times = {c: sim.fedavg_round_time(
-            self.dev_by_id[c], w_size=costs["w_size"], p=p_n,
+            self.dev_by_id[c], w_size=costs["w_size"], p=self._p_of(c),
             f_full=costs["f_full"]) for c in participants}
-        self.clock += max(times.values())
-        self.comm += sum(sim.fedavg_round_comm(w_size=costs["w_size"])
+        if times:
+            self.clock += max(times.values())
+        self.comm += sum(sim.fedavg_round_comm_bytes(w_size=costs["w_size"])
                          for _ in participants)
         self.scheduler.end_round()
+        # mean over participating clients (not the last client's)
+        loss = float(np.mean(losses)) if losses else float("nan")
         self.history.append({"round": len(self.history),
                              "clock": self.clock, "comm": self.comm,
                              "loss": loss})
@@ -266,37 +304,46 @@ class S2FLEngine:
         return any_d["tokens"].shape[1]
 
     def _tick(self, participants, splits):
-        ecfg = self.ecfg
-        p_n = ecfg.local_steps * ecfg.batch_size
+        """Eq.-1 clock + byte accounting through the comm channel: the
+        payload term uses the codec's exact wire bytes (metered during
+        the round) and the link model's rate at the current clock, so
+        the scheduler's client time table reacts to link state."""
+        ch = self.channel
         times, comms = {}, 0.0
         if getattr(self.scheduler, "warming_up", False):
             # §3.1: warm-up Wc is dispatched to ALL devices, so the Eq.-1
             # clock is observed for every device, not just participants.
+            # Non-participants never materialize tensors; their payload
+            # is the codec's analytic estimate.
             s = self.scheduler.warmup_split()
             costs = flops_util.split_costs(self.model, s,
                                            seq_len=self._seq_len())
             for d in self.devices:
                 if d.cid in self.data and d.cid not in participants:
-                    t = sim.device_round_time(
+                    p_c = self._p_of(d.cid)
+                    t, _ = ch.analytic_round_time(
                         d, wc_size=costs["wc_size"],
-                        feat_size=costs["feat_size"], p=p_n,
-                        fc=p_n * costs["fc"], fs=p_n * costs["fs"])
+                        n_values=p_c * costs["feat_size"],
+                        fc=p_c * costs["fc"], fs=p_c * costs["fs"],
+                        t=self.clock)
                     self.scheduler.observe(d.cid, s, t)
         for c in participants:
             costs = flops_util.split_costs(self.model, splits[c],
                                            seq_len=self._seq_len())
-            t = sim.device_round_time(
-                self.dev_by_id[c], wc_size=costs["wc_size"],
-                feat_size=costs["feat_size"], p=p_n,
-                fc=p_n * costs["fc"], fs=p_n * costs["fs"])
+            dev = self.dev_by_id[c]
+            p_c = self._p_of(c)
+            nbytes = sim.model_dispatch_bytes(wc_size=costs["wc_size"]) \
+                + ch.round_payload(c)
+            t = sim.device_round_time_bytes(
+                dev, comm_bytes=nbytes, fc=p_c * costs["fc"],
+                fs=p_c * costs["fs"], rate=ch.rate(dev, self.clock))
             times[c] = t
-            comms += sim.device_round_comm(
-                wc_size=costs["wc_size"], feat_size=costs["feat_size"],
-                p=p_n)
+            comms += nbytes
             self.scheduler.observe(c, splits[c], t)
-        self.clock += max(times.values())
+        if times:
+            self.clock += max(times.values())
         self.comm += comms
-        return max(times.values()), comms
+        return (max(times.values()) if times else 0.0), comms
 
     # -------------------------------------------------------------- eval
     def evaluate(self, test_data, batch_size: int = 256):

@@ -24,6 +24,10 @@ RATE_SETTINGS = {"low": 1e6, "mid": 2e6, "high": 5e6}
 SERVER_FLOPS = 5e10
 SERVER_RATE = 1e7
 
+# repro.comm byte convention: rates stay in Table-1 elements/s; byte
+# accounting treats one fp32 element as 4 bytes (comm/README.md).
+BYTES_PER_ELEM = 4.0
+
 
 @dataclasses.dataclass(frozen=True)
 class Device:
@@ -71,6 +75,22 @@ def device_round_comm(*, wc_size: float, feat_size: float, p: int) -> float:
     return 2.0 * wc_size + 2.0 * p * feat_size
 
 
+def device_round_time_bytes(dev: Device, *, comm_bytes: float, fc: float,
+                            fs: float, rate: float = None) -> float:
+    """Eq. 1 with channel-metered payloads: comm_bytes is the full wire
+    traffic for this device-round (2|Wc| dispatch + encoded features +
+    encoded gradients), ``rate`` the link model's elements/s at the
+    current clock (None -> the device's static Table-1 rate)."""
+    r = (dev.rate if rate is None else rate) * BYTES_PER_ELEM
+    return comm_bytes / r + fc / dev.comp + fs / SERVER_FLOPS
+
+
+def model_dispatch_bytes(*, wc_size: float) -> float:
+    """Wc down + updated Wc back up, fp32 (codecs cover the cut-layer
+    exchange only)."""
+    return 2.0 * wc_size * BYTES_PER_ELEM
+
+
 def fedavg_round_time(dev: Device, *, w_size: float, p: int,
                       f_full: float) -> float:
     """FedAvg baseline: full model both ways, all compute on device."""
@@ -79,3 +99,7 @@ def fedavg_round_time(dev: Device, *, w_size: float, p: int,
 
 def fedavg_round_comm(*, w_size: float) -> float:
     return 2.0 * w_size
+
+
+def fedavg_round_comm_bytes(*, w_size: float) -> float:
+    return 2.0 * w_size * BYTES_PER_ELEM

@@ -1,0 +1,2 @@
+from repro.kernels.int8_quant.ops import (  # noqa: F401
+    int8_dequantize, int8_quantize)

@@ -1,0 +1,104 @@
+"""Int8 affine quantize / dequantize Pallas TPU kernel pair.
+
+The comm codec hot path (repro.comm): features crossing the cut are
+quantized per-row (last axis) to int8 with an affine map
+
+    q  = clip(round(x / scale + zp), -127, 127)        int8
+    x' = scale * (q - zp)                              dequant
+
+scale/zp are fp32 per row, so a (R, C) fp32 payload becomes R*C bytes of
+int8 plus 8 bytes per row of metadata — a ~4x wire reduction for C >> 8.
+
+Grid: (n_row_blocks,); each step sees a (BR, C) block in VMEM. Row-wise
+min/max, the scale/zp computation and the elementwise map are all VPU
+work on fully resident blocks, so the kernel is bandwidth-bound — exactly
+what we want for a transport codec.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Keep the affine range symmetric (+-127) so zp also fits comfortably in
+# fp32 and the dequant map needs no special-casing of -128.
+_QMAX = 127.0
+
+
+def _quantize_kernel(x_ref, q_ref, scale_ref, zp_ref):
+    x = x_ref[...].astype(jnp.float32)                  # (BR, C)
+    mn = jnp.min(x, axis=1, keepdims=True)              # (BR, 1)
+    mx = jnp.max(x, axis=1, keepdims=True)
+    scale = jnp.maximum((mx - mn) / (2.0 * _QMAX), 1e-12)
+    zp = -_QMAX - mn / scale                            # maps mn -> -127
+    q = jnp.clip(jnp.round(x / scale + zp), -_QMAX, _QMAX)
+    q_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale
+    zp_ref[...] = zp
+
+
+def _dequantize_kernel(q_ref, scale_ref, zp_ref, x_ref):
+    q = q_ref[...].astype(jnp.float32)
+    x_ref[...] = (scale_ref[...] * (q - zp_ref[...])).astype(x_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def int8_quantize_pallas(x, *, block_rows: int = 256,
+                         interpret: bool = True):
+    """x: (R, C) float. Returns (q int8 (R,C), scale f32 (R,1),
+    zp f32 (R,1)). R need not be a multiple of block_rows (padded rows
+    quantize garbage that the wrapper slices off)."""
+    r, c = x.shape
+    br = min(block_rows, r)
+    nb = pl.cdiv(r, br)
+    pad = nb * br - r
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    q, scale, zp = pl.pallas_call(
+        _quantize_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb * br, c), jnp.int8),
+            jax.ShapeDtypeStruct((nb * br, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nb * br, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q[:r], scale[:r], zp[:r]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret", "dtype"))
+def int8_dequantize_pallas(q, scale, zp, *, block_rows: int = 256,
+                           dtype=jnp.float32, interpret: bool = True):
+    """Inverse of int8_quantize_pallas. q: (R, C) int8; scale/zp: (R, 1)."""
+    r, c = q.shape
+    br = min(block_rows, r)
+    nb = pl.cdiv(r, br)
+    pad = nb * br - r
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+        scale = jnp.pad(scale, ((0, pad), (0, 0)))
+        zp = jnp.pad(zp, ((0, pad), (0, 0)))
+    x = pl.pallas_call(
+        _dequantize_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * br, c), dtype),
+        interpret=interpret,
+    )(q, scale, zp)
+    return x[:r]

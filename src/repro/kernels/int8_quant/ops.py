@@ -1,0 +1,83 @@
+"""Public wrappers for the int8 quant kernels: arbitrary-rank arrays are
+flattened and re-grouped into (n_groups, group) rows so each fp32
+scale/zp pair covers ``group`` values regardless of the tensor's last-dim
+width (CNN feature maps have as few as 16 channels — per-channel-row
+metadata would cost 50% of the wire).
+
+The Pallas pair and the jnp reference are numerically identical, so the
+default picks whichever is fast for the backend: the real kernel on TPU,
+the reference elsewhere (interpret-mode Pallas in the per-step training
+hot path would be the slowest option). REPRO_COMM_KERNEL=1/0 forces
+either path; REPRO_PALLAS_INTERPRET follows the repo-wide convention."""
+from __future__ import annotations
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_quant.kernel import (int8_dequantize_pallas,
+                                             int8_quantize_pallas)
+from repro.kernels.int8_quant.ref import (int8_dequantize_ref,
+                                          int8_quantize_ref)
+
+_USE_KERNEL = None
+_INTERPRET = None
+
+
+def _kernel_enabled() -> bool:
+    global _USE_KERNEL
+    if _USE_KERNEL is None:
+        env = os.environ.get("REPRO_COMM_KERNEL", "")
+        # lazy: jax.default_backend() initializes the backend
+        _USE_KERNEL = (env == "1" if env
+                       else jax.default_backend() == "tpu")
+    return _USE_KERNEL
+
+
+def _interpret() -> bool:
+    """Compiled Pallas on TPU, interpreter elsewhere (unless forced) —
+    otherwise default env vars would run interpret-mode Pallas in the
+    per-step training hot path on TPU, the slowest option."""
+    global _INTERPRET
+    if _INTERPRET is None:
+        env = os.environ.get("REPRO_PALLAS_INTERPRET", "")
+        _INTERPRET = (env == "1" if env
+                      else jax.default_backend() != "tpu")
+    return _INTERPRET
+
+
+GROUP = 256                     # values per scale/zp pair (8 B / 256 B)
+
+
+def _as_groups(x, group: int):
+    flat = x.reshape(-1)
+    g = max(1, min(group, flat.size))
+    pad = (-flat.size) % g
+    if pad:
+        # edge-pad: zero-padding would drag the tail group's min/max
+        # toward 0 and blow its quantization step ~range/254 bound
+        flat = jnp.pad(flat, (0, pad), mode="edge")
+    return flat.reshape(-1, g)
+
+
+def int8_quantize(x, group: int = GROUP):
+    """x: any-rank float array -> (q int8 (R,G), scale (R,1), zp (R,1),
+    orig_shape). Rows are groups of ``group`` consecutive values (the
+    tail group is zero-padded on the wire)."""
+    x2 = _as_groups(x, group)
+    if _kernel_enabled():
+        q, scale, zp = int8_quantize_pallas(x2, interpret=_interpret())
+    else:
+        q, scale, zp = int8_quantize_ref(x2)
+    return q, scale, zp, x.shape
+
+
+def int8_dequantize(q, scale, zp, shape, dtype=jnp.float32):
+    if _kernel_enabled():
+        x = int8_dequantize_pallas(q, scale, zp, dtype=dtype,
+                                   interpret=_interpret())
+    else:
+        x = int8_dequantize_ref(q, scale, zp, dtype=dtype)
+    return x.reshape(-1)[:math.prod(shape)].reshape(shape)

@@ -14,6 +14,7 @@ import json
 import time
 
 from repro.configs import get_config, make_reduced
+from repro.configs.base import CommConfig
 from repro.core.engine import EngineConfig, S2FLEngine
 from repro.data.partition import federate
 from repro.data.synthetic import make_image_dataset, make_lm_dataset
@@ -61,6 +62,15 @@ def main(argv=None):
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
+    # transport (repro.comm)
+    ap.add_argument("--codec", default="fp32",
+                    choices=["fp32", "bf16", "fp16", "int8"],
+                    help="uplink feature codec")
+    ap.add_argument("--grad-codec", default="",
+                    choices=["", "fp32", "bf16", "fp16", "int8"],
+                    help="downlink dfx codec (default: same as --codec)")
+    ap.add_argument("--link-trace", default="",
+                    help="JSON LinkTrace file (default: static Table-1)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -72,12 +82,15 @@ def main(argv=None):
         n_clients=args.clients, alpha=args.alpha, seq_len=args.seq_len,
         seed=args.seed)
 
+    ccfg = CommConfig(codec=args.codec, grad_codec=args.grad_codec,
+                      link="trace" if args.link_trace else "static",
+                      trace_file=args.link_trace)
     ecfg = EngineConfig(
         mode=args.mode, rounds=args.rounds,
         clients_per_round=args.per_round, batch_size=args.batch_size,
         local_steps=args.local_steps, lr=args.lr, seed=args.seed,
         use_balance=not args.no_balance, use_sliding=not args.no_sliding,
-        n_classes=n_classes)
+        n_classes=n_classes, comm=ccfg)
     eng = S2FLEngine(model, fed, ecfg)
     t0 = time.time()
     eng.run(eval_data=test, eval_every=args.eval_every, verbose=True)

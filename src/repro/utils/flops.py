@@ -122,6 +122,8 @@ def _cnn_unit_costs(cfg) -> tuple:
             lambda d: jax.ShapeDtypeStruct(d.shape, jnp.float32),
             params_abs["units"][i]), x)
         cost = lowered.compile().cost_analysis()
+        if isinstance(cost, (list, tuple)):     # older jaxlib: per-device list
+            cost = cost[0] if cost else {}
         flops = float(cost.get("flops", 0.0))
         x = jax.eval_shape(apply_i, jax.tree.map(
             lambda d: jax.ShapeDtypeStruct(d.shape, jnp.float32),

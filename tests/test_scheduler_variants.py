@@ -63,6 +63,41 @@ def test_ema_tracks_drifting_device():
     assert sched.table.get(0, 1) < 3.0      # converged toward 2.0
 
 
+def test_mintime_falls_back_to_smallest_for_unmeasured():
+    """A client with no time-table entries (joined after warm-up) gets
+    the smallest split — the safe choice for an unknown device."""
+    plan = SplitPlan(n_units=6, split_points=(1, 2, 4))
+    sched = MinTimeScheduler(plan)
+    t_of = lambda c, s: (s + 1.0) * (c + 1.0)
+    _run(sched, [0, 1], t_of, rounds=plan.k + 1)    # table for 0,1 only
+    assert not sched.warming_up
+    sel = sched.select([0, 1, 99])                  # 99 never measured
+    assert sel[99] == plan.smallest()
+    assert sel[0] in plan.split_points and sel[1] in plan.split_points
+    # same fallback on the median-matching scheduler
+    sched2 = SlidingSplitScheduler(plan)
+    _run(sched2, [0, 1], t_of, rounds=plan.k + 1)
+    assert sched2.select([0, 1, 99])[99] == plan.smallest()
+
+
+def test_warmup_traverses_all_splits_once_per_cycle():
+    """§3.1: the K warm-up rounds dispatch each candidate split exactly
+    once (all clients share the split within a round)."""
+    plan = SplitPlan(n_units=10, split_points=(1, 3, 5))
+    for cls in (SlidingSplitScheduler, MinTimeScheduler):
+        sched = cls(plan)
+        seen = []
+        while sched.warming_up:
+            s = sched.warmup_split()
+            sel = sched.select([0, 1, 2])
+            assert set(sel.values()) == {s}         # same split for all
+            seen.append(s)
+            sched.end_round()
+        assert seen == list(plan.split_points)      # each exactly once
+        assert len(seen) == plan.k
+        assert not sched.warming_up
+
+
 def test_fixed_scheduler_interface():
     plan = SplitPlan(n_units=4, split_points=(1, 2, 3))
     s = FixedSplitScheduler(plan, split=2)

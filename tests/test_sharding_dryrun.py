@@ -106,6 +106,8 @@ with mesh:
                 out_shardings=out_sh).lower(abstract_model(cfg),
                                             batch).compile()
 cost = c.cost_analysis()
+if isinstance(cost, (list, tuple)):   # older jaxlib: per-device list
+    cost = cost[0]
 assert cost["flops"] > 0
 print("OK", cost["flops"])
 """
@@ -119,6 +121,9 @@ def test_fused_step_lowers_on_small_mesh(arch):
         [sys.executable, "-c", DRYRUN_SMALL.format(arch=arch)],
         capture_output=True, text=True, timeout=600,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"}, cwd="/root/repo")
+             "HOME": "/root",
+             # host-mesh lowering needs the CPU platform; skipping the
+             # TPU probe also avoids a 60s metadata timeout on CI
+             "JAX_PLATFORMS": "cpu"}, cwd="/root/repo")
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout
