@@ -1,11 +1,14 @@
 """Figures 5/6/7 — configuration sweeps on the Eq.-1 simulated clock:
   fig5: number of participating devices x in {5, 10, 15, 20}
-  fig6: device compositions High:Mid:Low = 5:3:2 vs 2:3:5
+  fig6: device compositions High:Mid:Low = 5:3:2 vs 2:3:5, plus the
+        sync vs semi_async round-clock comparison (event-queue straggler
+        overlap) on the straggler-heavy 2:3:5 mix
   fig7: client-set size |C| in {20, 50, 100} at fixed 0.1 sampling
 
 The time/straggler effects are what Eq. 1 defines, so these sweeps report
-the simulated per-round wall clock of SFL vs S²FL (the accuracy curves of
-the figures are covered by benchmarks/accuracy.py at reduced scale)."""
+the simulated per-round wall clock of SFL vs S²FL through the shared
+``RoundDriver`` (analytic channel-byte costs; the accuracy curves of the
+figures are covered by benchmarks/accuracy.py at reduced scale)."""
 from __future__ import annotations
 
 import numpy as np
@@ -13,10 +16,13 @@ import numpy as np
 from benchmarks.common import Timer, emit
 
 
-def _sim(arch, n_devices, per_round, composition=None, rounds=20, seed=0):
+def _drivers(arch, n_devices, composition, seed, exec_mode, staleness_cap):
+    from repro.comm import CommChannel
     from repro.configs import get_config
-    from repro.core.scheduler import SlidingSplitScheduler
-    from repro.core.simulation import device_round_time, make_device_grid
+    from repro.core.driver import AnalyticCost, RoundDriver
+    from repro.core.scheduler import (FixedSplitScheduler,
+                                      SlidingSplitScheduler)
+    from repro.core.simulation import make_device_grid
     from repro.core.split import default_plan
     from repro.models import SplitModel
     from repro.utils.flops import split_costs
@@ -26,64 +32,77 @@ def _sim(arch, n_devices, per_round, composition=None, rounds=20, seed=0):
     costs = {s: split_costs(model, s) for s in plan.split_points}
     devices = make_device_grid(n_devices, seed=seed,
                                composition=composition)
+    cost = AnalyticCost(CommChannel(), costs, p=128)
+    sfl = RoundDriver(FixedSplitScheduler(plan), cost, devices)
+    s2 = RoundDriver(SlidingSplitScheduler(plan), cost, devices,
+                     mode=exec_mode, staleness_cap=staleness_cap)
+    return devices, sfl, s2
+
+
+def _sim(arch, n_devices, per_round, composition=None, rounds=20, seed=0,
+         exec_mode="sync", staleness_cap=1):
+    devices, sfl, s2 = _drivers(arch, n_devices, composition, seed,
+                                exec_mode, staleness_cap)
     rng = np.random.default_rng(seed)
-    p = 128
-
-    def t_of(dev, s):
-        c = costs[s]
-        return device_round_time(dev, wc_size=c["wc_size"],
-                                 feat_size=c["feat_size"], p=p,
-                                 fc=p * c["fc"], fs=p * c["fs"])
-
-    sfl_clock = 0.0
-    s3 = plan.largest()
-    sched = SlidingSplitScheduler(plan)
-    s2_clock = 0.0
     for r in range(rounds):
         part = rng.choice(devices, size=per_round, replace=False)
-        sfl_clock += max(t_of(d, s3) for d in part)
-        if sched.warming_up:
-            s = sched.warmup_split()
-            for d in devices:                # §3.1: warm-up hits all devices
-                sched.observe(d.cid, s, t_of(d, s))
-        sel = sched.select([d.cid for d in part])
-        ts = {}
-        for d in part:
-            ts[d.cid] = t_of(d, sel[d.cid])
-            sched.observe(d.cid, sel[d.cid], ts[d.cid])
-        s2_clock += max(ts.values())
-        sched.end_round()
-    return sfl_clock, s2_clock
+        sfl.run_round(part)
+        s2.run_round(part)
+    # wait out in-flight semi_async stragglers so both clocks cover the
+    # same completed work (sync already has an empty heap)
+    s2.flush()
+    return sfl.clock, s2.clock
 
 
-def run():
+def run(quick: bool = False):
+    rounds = 6 if quick else 20
+    n_dev = 30 if quick else 100
+
     # fig 5: x devices per round
-    for x in (5, 10, 15, 20):
+    for x in ((5, 10) if quick else (5, 10, 15, 20)):
         with Timer() as t:
-            sfl, s2 = _sim("vgg16", n_devices=100, per_round=x)
+            sfl, s2 = _sim("vgg16", n_devices=n_dev, per_round=x,
+                           rounds=rounds)
         emit(f"fig5.devices_{x}", t.us,
              f"sfl_clock={sfl:.1f};s2fl_clock={s2:.1f};"
              f"speedup={sfl / s2:.2f}x")
 
-    # fig 6: compositions
+    # fig 6: compositions, plus the event-queue execution modes on each
+    # mix — semi_async closes the aggregation window at the quorum
+    # arrival instead of the Eq.-1 max() barrier, so on the
+    # straggler-heavy 2:3:5 grid it must never lose to sync
     for name, comp in (("5:3:2", {"high": 5, "mid": 3, "low": 2}),
                        ("2:3:5", {"high": 2, "mid": 3, "low": 5})):
         with Timer() as t:
-            sfl, s2 = _sim("vgg16", n_devices=100, per_round=10,
-                           composition=comp)
+            sfl, s2 = _sim("vgg16", n_devices=n_dev, per_round=10,
+                           composition=comp, rounds=rounds)
+            _, s2_async = _sim("vgg16", n_devices=n_dev, per_round=10,
+                               composition=comp, rounds=rounds,
+                               exec_mode="semi_async", staleness_cap=1)
+        async_speedup = s2 / s2_async
         emit(f"fig6.comp_{name}", t.us,
              f"sfl_clock={sfl:.1f};s2fl_clock={s2:.1f};"
-             f"speedup={sfl / s2:.2f}x")
+             f"speedup={sfl / s2:.2f}x;"
+             f"s2fl_async_clock={s2_async:.1f};"
+             f"async_vs_sync={async_speedup:.2f}x")
+        if name == "2:3:5":
+            # acceptance: straggler overlap can only help the clock
+            assert async_speedup >= 1.0, (s2, s2_async)
 
     # fig 7: |C| at 0.1 sampling
-    for C in (20, 50, 100):
+    for C in ((20,) if quick else (20, 50, 100)):
         with Timer() as t:
             sfl, s2 = _sim("vgg16", n_devices=C,
-                           per_round=max(2, C // 10))
+                           per_round=max(2, C // 10), rounds=rounds)
         emit(f"fig7.clientset_{C}", t.us,
              f"sfl_clock={sfl:.1f};s2fl_clock={s2:.1f};"
              f"speedup={sfl / s2:.2f}x")
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny-scale smoke (CI)")
+    run(quick=ap.parse_args().quick)

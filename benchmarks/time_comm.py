@@ -4,9 +4,13 @@ device grid — faithful to the paper's methodology; the 'accuracy' axis is
 replaced by a fixed number of post-warmup rounds on CPU, since the clock
 and comm per round are the quantities Eq. 1 defines).
 
-Reported: per-round wall time + comm for each method and the S²FL/SFL and
-S²FL/FedAvg speedups (the paper reports 3.54x time and 2.57x comm on VGG16
-at a=0.5).
+All methods run through the shared ``RoundDriver`` on the channel byte
+path (comm is wire BYTES, fp32 analytic payloads — the legacy
+element-based helpers in core/simulation.py are deprecated). Reported:
+per-round wall time + comm for each method and the S²FL/SFL and
+S²FL/FedAvg speedups (the paper reports 3.54x time and 2.57x comm on
+VGG16 at a=0.5), plus the sync vs semi_async round clock of the S²FL
+schedule.
 
 Additionally (`sweep`): the repro.comm codec x link grid — for every
 payload codec (fp32 / bf16 / fp16 / int8) and link model (static Table-1
@@ -20,10 +24,10 @@ import numpy as np
 from benchmarks.common import Timer, emit
 from repro.comm import CommChannel, LinkTrace, StaticLink
 from repro.configs import get_config
-from repro.core.scheduler import SlidingSplitScheduler
-from repro.core.simulation import (device_round_comm, device_round_time,
-                                   fedavg_round_comm, fedavg_round_time,
-                                   make_device_grid)
+from repro.core.driver import AnalyticCost, FedAvgCost, RoundDriver
+from repro.core.scheduler import (FixedSplitScheduler, MinTimeScheduler,
+                                  SlidingSplitScheduler)
+from repro.core.simulation import make_device_grid
 from repro.core.split import default_plan
 from repro.models import SplitModel
 from repro.utils.flops import split_costs
@@ -32,67 +36,40 @@ from repro.utils.flops import split_costs
 def simulate(arch: str = "vgg16", *, n_devices: int = 100,
              per_round: int = 10, rounds: int = 30, p: int = 128,
              seed: int = 0):
+    """FedAvg vs SFL vs S²FL (median + beyond-paper min-time) on the
+    static Table-1 grid. Returns {method: (clock, comm_bytes)} plus the
+    semi_async S²FL clock under 's2fl_async'."""
     model = SplitModel(get_config(arch))
     plan = default_plan(model.n_units, k=3)
     costs = {s: split_costs(model, s) for s in plan.split_points}
     full = split_costs(model, plan.largest())
     devices = make_device_grid(n_devices, seed=seed)
-    rng = np.random.default_rng(seed)
 
-    def t_of(dev, s):
-        c = costs[s]
-        return device_round_time(dev, wc_size=c["wc_size"],
-                                 feat_size=c["feat_size"], p=p,
-                                 fc=p * c["fc"], fs=p * c["fs"])
+    def make(name):
+        cost = AnalyticCost(CommChannel(), costs, p=p)
+        if name == "fedavg":
+            return RoundDriver(FixedSplitScheduler(plan),
+                               FedAvgCost(full, p=p), devices)
+        if name == "sfl":
+            return RoundDriver(FixedSplitScheduler(plan), cost, devices)
+        if name == "s2fl_mintime":
+            return RoundDriver(MinTimeScheduler(plan), cost, devices)
+        if name == "s2fl_async":
+            return RoundDriver(SlidingSplitScheduler(plan), cost, devices,
+                               mode="semi_async", staleness_cap=1)
+        return RoundDriver(SlidingSplitScheduler(plan), cost, devices)
 
     out = {}
-    # FedAvg
-    clock = comm = 0.0
-    for r in range(rounds):
-        part = rng.choice(devices, size=per_round, replace=False)
-        clock += max(fedavg_round_time(d, w_size=full["w_size"], p=p,
-                                       f_full=full["f_full"]) for d in part)
-        comm += per_round * fedavg_round_comm(w_size=full["w_size"])
-    out["fedavg"] = (clock, comm)
-
-    # SFL (fixed largest split)
-    clock = comm = 0.0
-    s3 = plan.largest()
-    rng = np.random.default_rng(seed)
-    for r in range(rounds):
-        part = rng.choice(devices, size=per_round, replace=False)
-        clock += max(t_of(d, s3) for d in part)
-        comm += sum(device_round_comm(wc_size=costs[s3]["wc_size"],
-                                      feat_size=costs[s3]["feat_size"], p=p)
-                    for _ in part)
-    out["sfl"] = (clock, comm)
-
-    # S²FL (paper's median-matching sliding split) + the beyond-paper
-    # min-time scheduler
-    from repro.core.scheduler import MinTimeScheduler
-    for name, sched in (("s2fl", SlidingSplitScheduler(plan)),
-                        ("s2fl_mintime", MinTimeScheduler(plan))):
-        clock = comm = 0.0
+    for name in ("fedavg", "sfl", "s2fl", "s2fl_mintime", "s2fl_async"):
+        drv = make(name)
         rng = np.random.default_rng(seed)
         for r in range(rounds):
             part = rng.choice(devices, size=per_round, replace=False)
-            if sched.warming_up:
-                # §3.1: warm-up Wc goes to ALL devices -> full time table
-                s = sched.warmup_split()
-                for d in devices:
-                    sched.observe(d.cid, s, t_of(d, s))
-            sel = sched.select([d.cid for d in part])
-            times = {}
-            for d in part:
-                s = sel[d.cid]
-                times[d.cid] = t_of(d, s)
-                comm += device_round_comm(wc_size=costs[s]["wc_size"],
-                                          feat_size=costs[s]["feat_size"],
-                                          p=p)
-                sched.observe(d.cid, s, times[d.cid])
-            clock += max(times.values())
-            sched.end_round()
-        out[name] = (clock, comm)
+            drv.run_round(part)
+        # semi_async: include the straggler tail so every method's clock
+        # covers the same completed work
+        drv.flush()
+        out[name] = (drv.clock, drv.comm)
     return out
 
 
@@ -108,36 +85,17 @@ def simulate_comm(arch: str = "resnet8", *, codec: str = "fp32",
     costs = {s: split_costs(model, s) for s in plan.split_points}
     devices = make_device_grid(n_devices, seed=seed)
     ch = CommChannel(codec=codec, link=link or StaticLink())
-    sched = SlidingSplitScheduler(plan)
+    drv = RoundDriver(SlidingSplitScheduler(plan),
+                      AnalyticCost(ch, costs, p=p), devices)
     rng = np.random.default_rng(seed)
-
-    def t_and_bytes(dev, s, clock):
-        c = costs[s]
-        return ch.analytic_round_time(
-            dev, wc_size=c["wc_size"], n_values=p * c["feat_size"],
-            fc=p * c["fc"], fs=p * c["fs"], t=clock)
-
-    clock = comm = 0.0
-    sel = {}
+    rec = None
     for r in range(rounds):
         part = rng.choice(devices, size=per_round, replace=False)
-        if sched.warming_up:
-            s = sched.warmup_split()
-            for d in devices:
-                sched.observe(d.cid, s, t_and_bytes(d, s, clock)[0])
-        sel = sched.select([d.cid for d in part])
-        times = {}
-        for d in part:
-            t, nbytes = t_and_bytes(d, sel[d.cid], clock)
-            times[d.cid] = t
-            comm += nbytes
-            sched.observe(d.cid, sel[d.cid], t)
-        clock += max(times.values())
-        sched.end_round()
-    return clock, comm, sel
+        rec = drv.run_round(part)
+    return drv.clock, drv.comm, (rec.splits if rec else {})
 
 
-def sweep(arch: str = "resnet8"):
+def sweep(arch: str = "resnet8", *, rounds: int = 20):
     """codec x link grid -> per-cell bytes + round-time columns."""
     links = {
         "static": StaticLink(),
@@ -149,7 +107,7 @@ def sweep(arch: str = "resnet8"):
         for lname, link in links.items():
             with Timer() as t:
                 clock, nbytes, _ = simulate_comm(arch, codec=codec,
-                                                 link=link)
+                                                 link=link, rounds=rounds)
             if codec == "fp32" and lname == "static":
                 base = nbytes
             emit(f"comm_sweep.{arch}.{codec}.{lname}", t.us,
@@ -157,29 +115,43 @@ def sweep(arch: str = "resnet8"):
                  f"bytes_vs_fp32={base / nbytes:.2f}x")
 
 
-def run():
-    for arch in ("vgg16", "resnet8", "mobilenet"):
-        sweep(arch)
-    for arch in ("vgg16", "resnet8", "mobilenet"):
+def run(quick: bool = False):
+    arches = ("vgg16", "resnet8") if quick else ("vgg16", "resnet8",
+                                                 "mobilenet")
+    rounds = 8 if quick else 30
+    for arch in arches:
+        sweep(arch, rounds=8 if quick else 20)
+    for arch in arches:
         with Timer() as t:
-            res = simulate(arch)
+            res = simulate(arch, n_devices=30 if quick else 100,
+                           rounds=rounds)
         for mode, (clock, comm) in res.items():
             emit(f"table3.{arch}.{mode}", t.us / 3,
-                 f"sim_time_s={clock:.1f};comm_elems={comm:.3e}")
+                 f"sim_time_s={clock:.1f};comm_bytes={comm:.3e}")
         sp_t = res["sfl"][0] / res["s2fl"][0]
         sp_c = res["sfl"][1] / res["s2fl"][1]
         sp_ft = res["fedavg"][0] / res["s2fl"][0]
         sp_mt = res["sfl"][0] / res["s2fl_mintime"][0]
+        sp_async = res["s2fl"][0] / res["s2fl_async"][0]
         emit(f"table3.{arch}.speedup", t.us / 3,
              f"s2fl_vs_sfl_time={sp_t:.2f}x;s2fl_vs_sfl_comm={sp_c:.2f}x;"
              f"s2fl_vs_fedavg_time={sp_ft:.2f}x;"
-             f"mintime_vs_sfl_time={sp_mt:.2f}x")
+             f"mintime_vs_sfl_time={sp_mt:.2f}x;"
+             f"async_vs_sync_time={sp_async:.2f}x")
         if arch == "vgg16":
             # paper regime: S²FL strictly faster than SFL, SFL than FedAvg
             assert sp_t > 1.0 and sp_ft > 1.0
         # beyond-paper scheduler never loses to the paper's on wall clock
         assert res["s2fl_mintime"][0] <= res["s2fl"][0] * 1.02, arch
+        # event-queue overlap can only help the clock (static Table-1
+        # link: each window closes at or before the sync barrier)
+        assert sp_async >= 1.0, arch
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny-scale smoke (CI)")
+    run(quick=ap.parse_args().quick)

@@ -96,3 +96,11 @@ class CommChannel:
 
     def rate(self, dev, t: float) -> float:
         return self.link.rate(dev, t)
+
+    def mean_rate(self, dev, t0: float, t1: float) -> float:
+        """Average link rate over [t0, t1] (predictive forecasts price a
+        transfer spanning the projected window with this); links without
+        a mean fall back to the instantaneous rate at t0."""
+        if hasattr(self.link, "mean_rate"):
+            return self.link.mean_rate(dev, t0, t1)
+        return self.link.rate(dev, t0)

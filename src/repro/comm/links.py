@@ -32,6 +32,11 @@ class StaticLink:
         """elements/s for device ``dev`` at simulated time ``t``."""
         return dev.rate
 
+    def mean_rate(self, dev, t0: float, t1: float) -> float:
+        """Average rate over [t0, t1] (constant for a static link) —
+        what the predictive scheduler forecast prices a transfer with."""
+        return dev.rate
+
 
 class LinkTrace:
     name = "trace"
@@ -64,11 +69,42 @@ class LinkTrace:
                 f"period {self.period} must exceed the last anchor "
                 f"{times[-1]} or its multiplier would never apply")
         self.per_device_phase = per_device_phase
+        # cumulative ∫ multiplier over one period, for mean_rate: the
+        # last anchor's segment runs to ``period``
+        widths = [self.times[i + 1] - self.times[i]
+                  for i in range(len(self.times) - 1)]
+        widths.append(self.period - self.times[-1])
+        self._cum = [0.0]
+        for w, m in zip(widths, self.multipliers):
+            self._cum.append(self._cum[-1] + w * m)
+        self._period_integral = self._cum[-1]
 
     def multiplier_at(self, t: float, phase: float = 0.0) -> float:
         t = (t + phase) % self.period
         i = bisect.bisect_right(self.times, t) - 1
         return self.multipliers[max(i, 0)]
+
+    def _integral(self, t: float) -> float:
+        """∫_0^t multiplier, t unwrapped (t >= 0)."""
+        full, rem = divmod(t, self.period)
+        i = max(bisect.bisect_right(self.times, rem) - 1, 0)
+        return full * self._period_integral + self._cum[i] \
+            + self.multipliers[i] * (rem - self.times[i])
+
+    def mean_multiplier(self, t0: float, t1: float,
+                        phase: float = 0.0) -> float:
+        """Exact time-average of the multiplier over [t0, t1]."""
+        if t1 <= t0:
+            return self.multiplier_at(t0, phase)
+        return (self._integral(t1 + phase) - self._integral(t0 + phase)) \
+            / (t1 - t0)
+
+    def mean_rate(self, dev, t0: float, t1: float) -> float:
+        """Average elements/s over [t0, t1] — the predictive scheduler
+        prices a transfer spanning the projected completion window with
+        this instead of the instantaneous rate at dispatch."""
+        return dev.rate * self.mean_multiplier(t0, t1,
+                                               self._phase(dev.cid))
 
     def _phase(self, cid) -> float:
         if not self.per_device_phase:

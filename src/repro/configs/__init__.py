@@ -1,6 +1,6 @@
-from repro.configs.base import (CNNConfig, CommConfig, ModelConfig,
-                                get_config, list_configs, make_reduced,
-                                register)
+from repro.configs.base import (CNNConfig, CommConfig, DriverConfig,
+                                ModelConfig, get_config, list_configs,
+                                make_reduced, register)
 
-__all__ = ["ModelConfig", "CNNConfig", "CommConfig", "get_config",
-           "list_configs", "make_reduced", "register"]
+__all__ = ["ModelConfig", "CNNConfig", "CommConfig", "DriverConfig",
+           "get_config", "list_configs", "make_reduced", "register"]

@@ -151,6 +151,24 @@ class CommConfig:
     trace_file: str = ""                # JSON overrides the inline trace
 
 
+@dataclasses.dataclass(frozen=True)
+class DriverConfig:
+    """Round-loop execution knobs (repro.core.driver.RoundDriver).
+
+    ``exec_mode='sync'`` is the paper's Eq.-1 barrier (the round clock
+    advances by the max participant time). ``'semi_async'`` turns device
+    completions into heap events: the aggregation window closes at a
+    ``quorum`` fraction of this round's arrivals and stragglers commit
+    up to ``staleness_cap`` rounds late (0 degenerates to sync).
+    ``predictive`` makes the sliding scheduler re-price its EMA table
+    with the link model's rate over the projected completion window."""
+
+    exec_mode: str = "sync"             # sync | semi_async
+    staleness_cap: int = 1              # max rounds an update may lag
+    quorum: float = 0.5                 # window-close arrival fraction
+    predictive: bool = False            # link-aware split forecasts
+
+
 def make_reduced(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 256,
                  vocab: int = 512) -> ModelConfig:
     """Reduced same-family variant for CPU smoke tests (<=2 layers,

@@ -1,0 +1,360 @@
+"""RoundDriver — THE warm-up → select → execute → observe → advance-clock
+loop (single implementation; benchmarks, tests and the engine all drive
+rounds through here instead of re-implementing it).
+
+Three layers:
+
+``CostModel``
+    What a device-round costs: ``time_and_bytes(dev, split, clock)`` →
+    Eq.-1 wall time + wire bytes. ``AnalyticCost`` prices payloads with
+    the channel's analytic codec estimates (the benchmark/tests path);
+    ``MeteredCost`` uses the exact bytes the ``CommChannel`` metered
+    while real tensors crossed it (the ``S2FLEngine`` path); and
+    ``FedAvgCost`` prices the full-model baseline. ``CallableCost``
+    wraps a plain ``t_of(cid, split)`` for unit tests.
+
+``RoundDriver.run_round``
+    One round: during §3.1 warm-up, observe every device's Eq.-1 time so
+    the scheduler's client time table fills; select splits; optionally
+    call back into the caller (the engine trains for real here and
+    returns metered payload bytes + its Eq.-2 groups); observe the
+    participants' times; advance the clock.
+
+Execution modes (the clock semantics):
+    ``sync``       the paper's Eq.-1 barrier — the round's clock advance
+                   is ``max`` over participant times; everything commits
+                   in the round it was dispatched.
+    ``semi_async`` device/group completions are events in a heap. The
+                   aggregation window closes once a ``quorum`` fraction
+                   of this round's arrivals are in; stragglers keep
+                   running and commit in the window where their event
+                   lands, at most ``staleness_cap`` rounds late (the
+                   window blocks on any event that would otherwise
+                   exceed the cap — ``staleness_cap=0`` degenerates to
+                   ``sync``). The clock is a true event timeline: on a
+                   static link semi_async wall-clock never exceeds sync
+                   (each window closes at or before the sync barrier).
+
+Predictive split selection: with ``predictive=True`` the driver installs
+a ``forecast`` hook on the scheduler — instead of trusting the EMA time
+table alone, each candidate time is re-priced with the link model's
+MEAN rate over the projected completion window ``[clock, clock + ema]``
+(``CommChannel.mean_rate`` → ``LinkTrace`` exact integral), so a fade
+that will hit mid-round is anticipated rather than discovered.
+
+See ``core/README.md`` for the design discussion.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Callable, Optional
+
+from repro.core.simulation import (device_round_time_bytes,
+                                   fedavg_round_comm_bytes,
+                                   fedavg_round_time, model_dispatch_bytes)
+
+EXEC_MODES = ("sync", "semi_async")
+
+
+def _cid(dev):
+    """Device handle -> client id (accepts Device objects or bare ids)."""
+    return getattr(dev, "cid", dev)
+
+
+# ---------------------------------------------------------------------------
+# cost models
+# ---------------------------------------------------------------------------
+class CostModel:
+    """(time, bytes) of one device-round at simulated time ``clock``."""
+
+    def time_and_bytes(self, dev, split: int, clock: float,
+                       payload_bytes: Optional[float] = None):
+        raise NotImplementedError
+
+    def forecast_time(self, dev, split: int, clock: float,
+                      horizon: float) -> Optional[float]:
+        """Predicted round time if dispatched now and finishing ~horizon
+        later (None -> no prediction, caller falls back to the EMA)."""
+        return None
+
+
+class AnalyticCost(CostModel):
+    """Eq.-1 via the channel's analytic payload estimates — what every
+    benchmark and scheduler test uses (no tensors ever materialize).
+
+    costs: {split: {'wc_size','feat_size','fc','fs'}} per-sample Eq.-1
+    quantities (``repro.utils.flops.split_costs``) or a callable
+    ``split -> dict`` (resolved lazily and cached). ``p`` is the local
+    sample count per round; ``p_of(cid)`` overrides it per client.
+    """
+
+    def __init__(self, channel, costs, *, p: int = 128,
+                 p_of: Optional[Callable] = None):
+        self.channel = channel
+        self._costs = costs if callable(costs) else costs.__getitem__
+        self._cache: dict = {}
+        self.p_of = p_of or (lambda cid: p)
+
+    def cost(self, split: int) -> dict:
+        if split not in self._cache:
+            self._cache[split] = self._costs(split)
+        return self._cache[split]
+
+    def time_and_bytes(self, dev, split, clock, payload_bytes=None):
+        c, p = self.cost(split), self.p_of(_cid(dev))
+        return self.channel.analytic_round_time(
+            dev, wc_size=c["wc_size"], n_values=p * c["feat_size"],
+            fc=p * c["fc"], fs=p * c["fs"], t=clock)
+
+    def forecast_time(self, dev, split, clock, horizon):
+        c, p = self.cost(split), self.p_of(_cid(dev))
+        nbytes = model_dispatch_bytes(wc_size=c["wc_size"]) \
+            + self.channel.estimate_round_payload(p * c["feat_size"])
+        rate = self.channel.mean_rate(dev, clock,
+                                      clock + max(horizon, 1e-9))
+        return device_round_time_bytes(dev, comm_bytes=nbytes,
+                                       fc=p * c["fc"], fs=p * c["fs"],
+                                       rate=rate)
+
+
+class MeteredCost(AnalyticCost):
+    """Engine path: when the channel metered real payload bytes for a
+    participant, price exactly those; otherwise (warm-up observation of
+    devices whose tensors never materialize, forecasts) fall back to the
+    analytic estimate."""
+
+    def time_and_bytes(self, dev, split, clock, payload_bytes=None):
+        if payload_bytes is None:
+            return super().time_and_bytes(dev, split, clock)
+        c, p = self.cost(split), self.p_of(_cid(dev))
+        nbytes = model_dispatch_bytes(wc_size=c["wc_size"]) + payload_bytes
+        t = device_round_time_bytes(
+            dev, comm_bytes=nbytes, fc=p * c["fc"], fs=p * c["fs"],
+            rate=self.channel.rate(dev, clock))
+        return t, nbytes
+
+
+class FedAvgCost(CostModel):
+    """Full-model FedAvg baseline round cost (split is ignored)."""
+
+    def __init__(self, costs_full, *, p: int = 128,
+                 p_of: Optional[Callable] = None):
+        self._costs = costs_full if callable(costs_full) \
+            else (lambda: costs_full)
+        self._cache = None
+        self.p_of = p_of or (lambda cid: p)
+
+    def cost(self) -> dict:
+        if self._cache is None:
+            self._cache = self._costs()
+        return self._cache
+
+    def time_and_bytes(self, dev, split, clock, payload_bytes=None):
+        c = self.cost()
+        t = fedavg_round_time(dev, w_size=c["w_size"],
+                              p=self.p_of(_cid(dev)), f_full=c["f_full"])
+        return t, fedavg_round_comm_bytes(w_size=c["w_size"])
+
+
+class CallableCost(CostModel):
+    """Unit-test adapter: a plain ``t_of(cid, split)`` (clock-free) or
+    ``t_of(cid, split, clock)`` time function, optional byte function."""
+
+    def __init__(self, t_of: Callable, bytes_of: Optional[Callable] = None,
+                 *, clocked: bool = False):
+        self.t_of, self.bytes_of, self.clocked = t_of, bytes_of, clocked
+
+    def time_and_bytes(self, dev, split, clock, payload_bytes=None):
+        cid = _cid(dev)
+        t = self.t_of(cid, split, clock) if self.clocked \
+            else self.t_of(cid, split)
+        return t, (self.bytes_of(cid, split) if self.bytes_of else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# the driver
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class RoundResult:
+    round: int                     # round index just driven
+    clock: float                   # driver clock after the window closed
+    round_time: float              # clock advance this round
+    comm_bytes: float              # wire bytes dispatched this round
+    splits: dict                   # {cid: split} selected this round
+    times: dict                    # {cid: Eq.-1 device time}
+    committed: tuple               # work keys whose updates commit now
+    staleness: dict                # {key: rounds late} for committed keys
+    pending: int                   # events still in flight afterwards
+
+
+@dataclasses.dataclass(order=True)
+class _Event:
+    ready: float
+    seq: int
+    round: int = dataclasses.field(compare=False)
+    key: object = dataclasses.field(compare=False)
+
+
+class RoundDriver:
+    """Owns the round loop and the simulated timeline.
+
+    scheduler : Sliding/MinTime/FixedSplitScheduler (select/observe/
+                end_round + the §3.1 warm-up protocol)
+    cost      : a CostModel
+    devices   : Device objects (or bare cids with a CallableCost)
+    warmup_devices : subset observed during warm-up rounds (default: all
+                devices — the engine restricts to devices that own data)
+    """
+
+    def __init__(self, scheduler, cost: CostModel, devices, *,
+                 mode: str = "sync", staleness_cap: int = 1,
+                 quorum: float = 0.5, predictive: bool = False,
+                 warmup_devices=None):
+        if mode not in EXEC_MODES:
+            raise ValueError(f"exec mode {mode!r}; known: {EXEC_MODES}")
+        if staleness_cap < 0:
+            raise ValueError(f"staleness_cap must be >= 0: {staleness_cap}")
+        if not 0.0 < quorum <= 1.0:
+            raise ValueError(f"quorum must be in (0, 1]: {quorum}")
+        self.scheduler = scheduler
+        self.cost = cost
+        self.devices = list(devices)
+        self.warmup_devices = (list(warmup_devices)
+                               if warmup_devices is not None
+                               else self.devices)
+        self._dev_by_id = {_cid(d): d for d in self.devices}
+        self.mode = mode
+        self.staleness_cap = staleness_cap
+        self.quorum = quorum
+        self.clock = 0.0
+        self.comm = 0.0                 # accumulated wire bytes
+        self.round = 0
+        self._pending: list = []        # _Event heap (semi_async)
+        self._seq = 0
+        if predictive:
+            if not hasattr(scheduler, "forecast"):
+                raise ValueError(
+                    f"{type(scheduler).__name__} has no forecast hook; "
+                    "predictive mode needs a sliding scheduler")
+            scheduler.forecast = self._forecast
+
+    # -------------------------------------------------------- predictive
+    def _forecast(self, cid, split, recorded):
+        """Scheduler hook: re-price the EMA entry with the link's mean
+        rate over the projected completion window [clock, clock+ema]."""
+        dev = self._dev_by_id.get(cid)
+        if dev is None:
+            return None
+        return self.cost.forecast_time(dev, split, self.clock, recorded)
+
+    # ------------------------------------------------------------- round
+    def run_round(self, participants, execute=None) -> RoundResult:
+        """Drive one round. ``participants``: cids or Device objects.
+
+        ``execute(splits) -> report`` (optional) runs the caller's real
+        work after selection; the report dict may carry
+        ``payload_bytes`` ({cid: metered wire bytes, cut-layer only})
+        and ``groups`` ({work_key: (cid, ...)} — commit granularity;
+        default one work item per participant keyed by cid).
+        """
+        part = [_cid(p) for p in participants]
+        part_set = set(part)
+        clock0 = self.clock
+
+        # §3.1 warm-up: the shared split is dispatched to ALL devices so
+        # the whole client time table fills; participants are observed
+        # below with their (possibly metered) round times instead.
+        if getattr(self.scheduler, "warming_up", False):
+            s = self.scheduler.warmup_split()
+            for d in self.warmup_devices:
+                if _cid(d) in part_set:
+                    continue
+                t, _ = self.cost.time_and_bytes(d, s, clock0)
+                self.scheduler.observe(_cid(d), s, t)
+
+        splits = self.scheduler.select(part)
+        plan = getattr(self.scheduler, "plan", None)
+        if plan is not None:
+            assert all(splits[c] in plan for c in part), splits
+
+        report = execute(splits) if execute is not None else None
+        payloads = (report or {}).get("payload_bytes", {})
+        groups = (report or {}).get("groups")
+        if groups is None:
+            groups = {c: (c,) for c in part}
+
+        times, comm = {}, 0.0
+        for c in part:
+            dev = self._dev_by_id.get(c, c)
+            t, nbytes = self.cost.time_and_bytes(
+                dev, splits[c], clock0, payload_bytes=payloads.get(c))
+            times[c] = t
+            comm += nbytes
+            self.scheduler.observe(c, splits[c], t)
+
+        items = {key: max(times[c] for c in members)
+                 for key, members in groups.items() if members}
+        committed, staleness, new_clock = self._close_window(items, clock0)
+
+        self.clock = new_clock
+        self.comm += comm
+        self.scheduler.end_round()
+        rec = RoundResult(
+            round=self.round, clock=self.clock,
+            round_time=new_clock - clock0, comm_bytes=comm, splits=splits,
+            times=times, committed=tuple(committed), staleness=staleness,
+            pending=len(self._pending))
+        self.round += 1
+        return rec
+
+    # ------------------------------------------------------ event window
+    def _push(self, key, ready):
+        heapq.heappush(self._pending,
+                       _Event(ready, self._seq, self.round, key))
+        self._seq += 1
+
+    def _pop_ready(self, horizon):
+        out = []
+        while self._pending and self._pending[0].ready <= horizon:
+            out.append(heapq.heappop(self._pending))
+        return out
+
+    def _close_window(self, items: dict, now: float):
+        """items: {key: duration}. Returns (committed keys, staleness
+        per key in rounds, new clock)."""
+        for key, dur in items.items():
+            self._push(key, now + dur)
+        if self.mode == "sync" or self.staleness_cap == 0:
+            # barrier: everything dispatched must land this round
+            new_clock = max((e.ready for e in self._pending), default=now)
+        elif not self._pending:
+            return [], {}, now
+        else:
+            fresh = sorted(now + d for d in items.values())
+            q = max(1, math.ceil(self.quorum * len(fresh))) if fresh else 0
+            t_quorum = fresh[q - 1] if fresh else now
+            # any event that would exceed the staleness cap by waiting
+            # for the NEXT window must be waited for in this one
+            forced = [e.ready for e in self._pending
+                      if e.round <= self.round - self.staleness_cap]
+            new_clock = max([t_quorum, now] + forced)
+        done = self._pop_ready(new_clock)
+        committed = [e.key for e in done]
+        staleness = {e.key: self.round - e.round for e in done}
+        assert all(v <= max(self.staleness_cap, 0)
+                   for v in staleness.values()), staleness
+        return committed, staleness, new_clock
+
+    def flush(self):
+        """Wait out every in-flight event (end of training): advances the
+        clock to the last pending completion and commits everything.
+        Returns (committed keys, staleness dict)."""
+        if not self._pending:
+            return [], {}
+        new_clock = max(e.ready for e in self._pending)
+        done = self._pop_ready(new_clock)
+        self.clock = max(self.clock, new_clock)
+        return [e.key for e in done], \
+            {e.key: self.round - 1 - e.round for e in done}

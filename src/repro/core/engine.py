@@ -25,10 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm import make_channel
-from repro.configs.base import CommConfig
+from repro.configs.base import CommConfig, DriverConfig
 from repro.core import simulation as sim
 from repro.core.aggregation import ClientState, aggregate, fedavg_aggregate
 from repro.core.balance import greedy_groups, label_histogram
+from repro.core.driver import FedAvgCost, MeteredCost, RoundDriver
 from repro.core.scheduler import FixedSplitScheduler, SlidingSplitScheduler
 from repro.core.split import SplitPlan, default_plan
 from repro.models.api import SplitModel
@@ -56,6 +57,9 @@ class EngineConfig:
     # (repro.comm; fp32/static reproduces the seed's semantics, comm is
     # accounted in bytes — see comm/README.md)
     comm: CommConfig = dataclasses.field(default_factory=CommConfig)
+    # round-loop execution: sync barrier vs semi-async event queue, and
+    # predictive (link-forecasting) split selection — core/README.md
+    driver: DriverConfig = dataclasses.field(default_factory=DriverConfig)
 
 
 class S2FLEngine:
@@ -88,17 +92,49 @@ class S2FLEngine:
         self.opt = sgd(ecfg.lr)
         self.params = model.init(jax.random.PRNGKey(ecfg.seed))
         self.channel = make_channel(ecfg.comm)
-        self.clock = 0.0
-        self.comm = 0.0               # accumulated wire bytes
         self.history = []          # per round dicts
         self._hists = {cid: self._client_hist(cid) for cid in data}
         self._key = jax.random.PRNGKey(ecfg.seed + 1)
+
+        # the unified round loop (core/driver.py): the engine's rounds
+        # are metered-cost driver rounds; clock/comm live on the driver
+        dcfg = ecfg.driver
+        if ecfg.mode == "fedavg":
+            cost = FedAvgCost(
+                lambda: flops_util.split_costs(self.model,
+                                               self.model.n_units,
+                                               seq_len=self._seq_len()),
+                p_of=self._p_of)
+        else:
+            cost = MeteredCost(
+                self.channel,
+                lambda s: flops_util.split_costs(self.model, s,
+                                                 seq_len=self._seq_len()),
+                p_of=self._p_of)
+        self.driver = RoundDriver(
+            self.scheduler, cost, self.devices, mode=dcfg.exec_mode,
+            staleness_cap=dcfg.staleness_cap, quorum=dcfg.quorum,
+            predictive=dcfg.predictive,
+            warmup_devices=[d for d in self.devices if d.cid in data])
+        self._held = {}            # gid -> un-committed round results
+        self._next_gid = 0
 
         # jit caches
         self._client_fwd = {}
         self._server_step = {}
         self._client_upd = {}
         self._fedavg_step = None
+
+    # ------------------------------------------------------- timeline
+    @property
+    def clock(self) -> float:
+        """Simulated Eq.-1 wall clock (owned by the RoundDriver)."""
+        return self.driver.clock
+
+    @property
+    def comm(self) -> float:
+        """Accumulated wire bytes (owned by the RoundDriver)."""
+        return self.driver.comm
 
     # ------------------------------------------------------------------ data
     def _client_hist(self, cid):
@@ -187,70 +223,75 @@ class S2FLEngine:
 
     def _sfl_round(self, participants):
         ecfg = self.ecfg
-        splits = self.scheduler.select(participants)
-
-        # Step 5: grouping (Eq. 2) — balance on, else singleton groups
-        if not participants:
-            groups = []
-        elif ecfg.mode == "s2fl" and ecfg.use_balance:
-            groups = greedy_groups([self._hists[c] for c in participants],
-                                   ecfg.group_size)
-            groups = [tuple(participants[i] for i in g) for g in groups]
-        else:
-            groups = [(c,) for c in participants]
-        gid_of = {c: gi for gi, g in enumerate(groups) for c in g}
-
-        client_params = {c: self.params for c in participants}
-        server_copies = {gi: self.params for gi in range(len(groups))}
-
-        self.channel.reset_round()
         group_losses = []              # last local step's per-group losses
-        for step_i in range(ecfg.local_steps):
+
+        def execute(splits):
+            # Step 5: grouping (Eq. 2) — balance on, else singletons
+            if not participants:
+                groups = []
+            elif ecfg.mode == "s2fl" and ecfg.use_balance:
+                groups = greedy_groups(
+                    [self._hists[c] for c in participants],
+                    ecfg.group_size)
+                groups = [tuple(participants[i] for i in g) for g in groups]
+            else:
+                groups = [(c,) for c in participants]
+
+            client_params = {c: self.params for c in participants}
+            server_copies = {gi: self.params for gi in range(len(groups))}
+
+            self.channel.reset_round()
+            for step_i in range(ecfg.local_steps):
+                for gi, group in enumerate(groups):
+                    batches = [self._sample_batch(c) for c in group]
+                    # Step 4: features cross the uplink (codec
+                    # round-trip applied, exact wire bytes metered)
+                    feats = [self.channel.uplink_features(
+                        c, self._get_client_fwd(splits[c])(
+                            client_params[c], b))
+                        for c, b in zip(group, batches)]
+                    gsplits = tuple(splits[c] for c in group)
+                    loss, sgrads, dfxs = self._get_server_step(gsplits)(
+                        server_copies[gi], feats, batches)
+                    if step_i == ecfg.local_steps - 1:
+                        group_losses.append(float(loss))
+                    # W_s update (Eq. 4)
+                    server_copies[gi] = jax.tree.map(
+                        lambda w, g: (w - ecfg.lr * g.astype(w.dtype)
+                                      ).astype(w.dtype),
+                        server_copies[gi], sgrads)
+                    # Steps 7/8: dfx back over the downlink
+                    for c, b, dfx in zip(group, batches, dfxs):
+                        dfx = self.channel.downlink_grads(c, dfx)
+                        client_params[c] = self._get_client_update(
+                            splits[c])(client_params[c], b, dfx)
+
+            # hand the driver commit-granularity work items: one per
+            # group, held here until its completion event lands
+            keyed = {}
             for gi, group in enumerate(groups):
-                batches = [self._sample_batch(c) for c in group]
-                # Step 4: features cross the uplink (codec round-trip
-                # applied, exact wire bytes metered)
-                feats = [self.channel.uplink_features(
-                    c, self._get_client_fwd(splits[c])(client_params[c], b))
-                    for c, b in zip(group, batches)]
-                gsplits = tuple(splits[c] for c in group)
-                loss, sgrads, dfxs = self._get_server_step(gsplits)(
-                    server_copies[gi], feats, batches)
-                if step_i == ecfg.local_steps - 1:
-                    group_losses.append(float(loss))
-                # W_s update (Eq. 4)
-                server_copies[gi] = jax.tree.map(
-                    lambda w, g: (w - ecfg.lr * g.astype(w.dtype)
-                                  ).astype(w.dtype),
-                    server_copies[gi], sgrads)
-                # Steps 7/8: dfx back to each device over the downlink
-                for c, b, dfx in zip(group, batches, dfxs):
-                    dfx = self.channel.downlink_grads(c, dfx)
-                    client_params[c] = self._get_client_update(splits[c])(
-                        client_params[c], b, dfx)
+                gid = self._next_gid
+                self._next_gid += 1
+                keyed[gid] = group
+                states = [ClientState(cid=c, params=client_params[c],
+                                      split=splits[c],
+                                      data_size=self._data_size(c),
+                                      group=gid) for c in group]
+                self._held[gid] = (states, server_copies[gi])
+            return {"groups": keyed,
+                    "payload_bytes": {c: self.channel.round_payload(c)
+                                      for c in participants}}
 
-        # Step 9 + Alg. 1
-        if participants:
-            states = [ClientState(cid=c, params=client_params[c],
-                                  split=splits[c],
-                                  data_size=self._data_size(c),
-                                  group=gid_of[c]) for c in participants]
-            self.params = aggregate(self.model, states, server_copies)
+        rec = self.driver.run_round(participants, execute=execute)
+        self._commit(rec.committed)
 
-        # Eq. 1 clock
-        round_time, round_comm = self._tick(participants, splits)
-        self.scheduler.end_round()
         # Eq.-3 group losses are SUMS over members, so divide the total
         # by the participant count: a per-client mean comparable across
-        # group sizes and with the FedAvg curve (not the last group's,
-        # which the seed reported); nan when no training happened
-        # (local_steps == 0 or no participants)
+        # group sizes and with the FedAvg curve; nan when no training
+        # happened (local_steps == 0 or no participants)
         loss = (float(np.sum(group_losses)) / len(participants)
                 if group_losses else float("nan"))
-        self.history.append({"round": len(self.history),
-                             "clock": self.clock, "comm": self.comm,
-                             "loss": loss})
-        return self.history[-1]
+        return self._record(loss, rec)
 
     def _fedavg_round(self, participants):
         ecfg = self.ecfg
@@ -267,34 +308,57 @@ class S2FLEngine:
 
             self._fedavg_step = jax.jit(step)
 
-        locals_, weights, losses = [], [], []
-        for c in participants:
-            p = self.params
-            l = None
-            for _ in range(ecfg.local_steps):
-                p, l = self._fedavg_step(p, self._sample_batch(c))
-            locals_.append(p)
-            weights.append(self._data_size(c))
-            if l is not None:
-                losses.append(float(l))
-        if locals_:
-            self.params = fedavg_aggregate(locals_, weights)
+        losses = []
 
-        costs = flops_util.split_costs(self.model, self.model.n_units,
-                                       seq_len=self._seq_len())
-        times = {c: sim.fedavg_round_time(
-            self.dev_by_id[c], w_size=costs["w_size"], p=self._p_of(c),
-            f_full=costs["f_full"]) for c in participants}
-        if times:
-            self.clock += max(times.values())
-        self.comm += sum(sim.fedavg_round_comm_bytes(w_size=costs["w_size"])
-                         for _ in participants)
-        self.scheduler.end_round()
+        def execute(splits):
+            keyed = {}
+            for c in participants:
+                p = self.params
+                l = None
+                for _ in range(ecfg.local_steps):
+                    p, l = self._fedavg_step(p, self._sample_batch(c))
+                if l is not None:
+                    losses.append(float(l))
+                gid = self._next_gid
+                self._next_gid += 1
+                keyed[gid] = (c,)
+                self._held[gid] = (p, self._data_size(c))
+            return {"groups": keyed}
+
+        rec = self.driver.run_round(participants, execute=execute)
+        self._commit(rec.committed)
         # mean over participating clients (not the last client's)
         loss = float(np.mean(losses)) if losses else float("nan")
+        return self._record(loss, rec)
+
+    def _commit(self, gids):
+        """Aggregate the work items whose completion events landed in
+        this window (sync: always exactly this round's; semi_async:
+        possibly fewer, plus stragglers from earlier rounds)."""
+        if not gids:
+            return
+        if self.ecfg.mode == "fedavg":
+            locals_, weights = [], []
+            for gid in gids:
+                p, w = self._held.pop(gid)
+                locals_.append(p)
+                weights.append(w)
+            self.params = fedavg_aggregate(locals_, weights)
+            return
+        states, copies = [], {}
+        for gid in gids:
+            st, sc = self._held.pop(gid)
+            states.extend(st)
+            copies[gid] = sc
+        if states:                     # Step 9 + Alg. 1
+            self.params = aggregate(self.model, states, copies)
+
+    def _record(self, loss, rec):
         self.history.append({"round": len(self.history),
                              "clock": self.clock, "comm": self.comm,
-                             "loss": loss})
+                             "loss": loss,
+                             "committed": len(rec.committed),
+                             "pending": rec.pending})
         return self.history[-1]
 
     def _seq_len(self):
@@ -302,48 +366,6 @@ class S2FLEngine:
             return 0
         any_d = next(iter(self.data.values()))
         return any_d["tokens"].shape[1]
-
-    def _tick(self, participants, splits):
-        """Eq.-1 clock + byte accounting through the comm channel: the
-        payload term uses the codec's exact wire bytes (metered during
-        the round) and the link model's rate at the current clock, so
-        the scheduler's client time table reacts to link state."""
-        ch = self.channel
-        times, comms = {}, 0.0
-        if getattr(self.scheduler, "warming_up", False):
-            # §3.1: warm-up Wc is dispatched to ALL devices, so the Eq.-1
-            # clock is observed for every device, not just participants.
-            # Non-participants never materialize tensors; their payload
-            # is the codec's analytic estimate.
-            s = self.scheduler.warmup_split()
-            costs = flops_util.split_costs(self.model, s,
-                                           seq_len=self._seq_len())
-            for d in self.devices:
-                if d.cid in self.data and d.cid not in participants:
-                    p_c = self._p_of(d.cid)
-                    t, _ = ch.analytic_round_time(
-                        d, wc_size=costs["wc_size"],
-                        n_values=p_c * costs["feat_size"],
-                        fc=p_c * costs["fc"], fs=p_c * costs["fs"],
-                        t=self.clock)
-                    self.scheduler.observe(d.cid, s, t)
-        for c in participants:
-            costs = flops_util.split_costs(self.model, splits[c],
-                                           seq_len=self._seq_len())
-            dev = self.dev_by_id[c]
-            p_c = self._p_of(c)
-            nbytes = sim.model_dispatch_bytes(wc_size=costs["wc_size"]) \
-                + ch.round_payload(c)
-            t = sim.device_round_time_bytes(
-                dev, comm_bytes=nbytes, fc=p_c * costs["fc"],
-                fs=p_c * costs["fs"], rate=ch.rate(dev, self.clock))
-            times[c] = t
-            comms += nbytes
-            self.scheduler.observe(c, splits[c], t)
-        if times:
-            self.clock += max(times.values())
-        self.comm += comms
-        return (max(times.values()) if times else 0.0), comms
 
     # -------------------------------------------------------------- eval
     def evaluate(self, test_data, batch_size: int = 256):
@@ -371,4 +393,14 @@ class S2FLEngine:
                 rec.update(self.evaluate(eval_data))
             if verbose:
                 print(rec)
+        # semi_async: wait out and aggregate any still-in-flight
+        # stragglers so no trained update is dropped at shutdown, and
+        # fold the flush tail into the final record so
+        # history[-1]['clock'] is the true total wall-clock
+        committed, _ = self.driver.flush()
+        self._commit(committed)
+        if committed and self.history:
+            self.history[-1]["clock"] = self.clock
+            self.history[-1]["committed"] += len(committed)
+            self.history[-1]["pending"] = 0
         return self.history

@@ -43,10 +43,27 @@ class ClientTimeTable:
 
 
 class SlidingSplitScheduler:
-    def __init__(self, plan: SplitPlan, ema: float = 0.5):
+    def __init__(self, plan: SplitPlan, ema: float = 0.5, forecast=None):
         self.plan = plan
         self.table = ClientTimeTable(ema=ema)
         self.round = 0
+        # optional predictive hook (RoundDriver wires it when
+        # predictive=True): forecast(cid, split, ema_time) -> predicted
+        # round time with the link model's rate at the projected
+        # completion window, None -> trust the EMA entry.
+        self.forecast = forecast
+
+    def _time(self, cid, split: int):
+        """Candidate time for (cid, split): the EMA table entry, passed
+        through the forecast hook when one is installed."""
+        t = self.table.get(cid, split)
+        if t is None:
+            return None
+        if self.forecast is not None:
+            ft = self.forecast(cid, split, t)
+            if ft is not None:
+                return float(ft)
+        return t
 
     @property
     def warming_up(self) -> bool:
@@ -64,22 +81,27 @@ class SlidingSplitScheduler:
         if self.warming_up:
             s = self.warmup_split()
             return {c: s for c in participants}
-        times = [self.table.get(c, s) for c in participants
-                 for s in self.plan.split_points
-                 if self.table.get(c, s) is not None]
+        t = self._candidate_times(participants)
+        times = [v for v in t.values() if v is not None]
         if not times:                       # nothing measured yet: smallest
             return {c: self.plan.smallest() for c in participants}
         median = float(np.median(times))
         out = {}
         for c in participants:
-            known = [(s, self.table.get(c, s))
-                     for s in self.plan.split_points
-                     if self.table.get(c, s) is not None]
+            known = [(s, t[c, s]) for s in self.plan.split_points
+                     if t[c, s] is not None]
             if not known:
                 out[c] = self.plan.smallest()
                 continue
             out[c] = min(known, key=lambda st: abs(st[1] - median))[0]
         return out
+
+    def _candidate_times(self, participants) -> dict:
+        """{(cid, split): time-or-None} — one _time() evaluation per
+        pair (the predictive forecast prices a trace integral per call,
+        so selects must not re-query the same candidate)."""
+        return {(c, s): self._time(c, s) for c in participants
+                for s in self.plan.split_points}
 
     def observe(self, cid, split: int, t: float):
         self.table.update(cid, split, t)
@@ -104,11 +126,11 @@ class MinTimeScheduler(SlidingSplitScheduler):
     def select(self, participants) -> dict:
         if self.warming_up:
             return super().select(participants)
+        t = self._candidate_times(participants)
         out = {}
         for c in participants:
-            known = [(s, self.table.get(c, s))
-                     for s in self.plan.split_points
-                     if self.table.get(c, s) is not None]
+            known = [(s, t[c, s]) for s in self.plan.split_points
+                     if t[c, s] is not None]
             if not known:
                 out[c] = self.plan.smallest()
             else:

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import warnings
 
 import numpy as np
 
@@ -64,14 +65,26 @@ class RoundCost:
     device_times: dict = dataclasses.field(default_factory=dict)
 
 
+_LEGACY_MSG = ("element-based Eq.-1 helper {} is deprecated: drive rounds "
+               "through repro.core.driver.RoundDriver with an AnalyticCost "
+               "(CommChannel byte path) instead")
+
+
 def device_round_time(dev: Device, *, wc_size: float, feat_size: float,
                       p: int, fc: float, fs: float) -> float:
-    """Eq. 1. wc_size: |Wc| elements; feat_size: q per-sample elements."""
+    """DEPRECATED (element-based). Eq. 1. wc_size: |Wc| elements;
+    feat_size: q per-sample elements. Use the channel byte path
+    (``CommChannel.analytic_round_time`` via ``driver.AnalyticCost``)."""
+    warnings.warn(_LEGACY_MSG.format("device_round_time"),
+                  DeprecationWarning, stacklevel=2)
     comm = (2.0 * wc_size + 2.0 * p * feat_size) / dev.rate
     return comm + fc / dev.comp + fs / SERVER_FLOPS
 
 
 def device_round_comm(*, wc_size: float, feat_size: float, p: int) -> float:
+    """DEPRECATED (element-based) — see ``device_round_time``."""
+    warnings.warn(_LEGACY_MSG.format("device_round_comm"),
+                  DeprecationWarning, stacklevel=2)
     return 2.0 * wc_size + 2.0 * p * feat_size
 
 
@@ -98,6 +111,9 @@ def fedavg_round_time(dev: Device, *, w_size: float, p: int,
 
 
 def fedavg_round_comm(*, w_size: float) -> float:
+    """DEPRECATED (element-based) — use ``fedavg_round_comm_bytes``."""
+    warnings.warn(_LEGACY_MSG.format("fedavg_round_comm"),
+                  DeprecationWarning, stacklevel=2)
     return 2.0 * w_size
 
 

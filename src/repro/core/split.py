@@ -35,6 +35,11 @@ class SplitPlan:
     def shared_end(self) -> int:           # end of shared portion
         return max(self.split_points)
 
+    def __contains__(self, split: int) -> bool:
+        """True when ``split`` is one of the K candidate split points —
+        the RoundDriver validates every scheduler selection with this."""
+        return split in self.split_points
+
     def smallest(self) -> int:
         return self.split_points[0]
 

@@ -14,7 +14,7 @@ import json
 import time
 
 from repro.configs import get_config, make_reduced
-from repro.configs.base import CommConfig
+from repro.configs.base import CommConfig, DriverConfig
 from repro.core.engine import EngineConfig, S2FLEngine
 from repro.data.partition import federate
 from repro.data.synthetic import make_image_dataset, make_lm_dataset
@@ -71,6 +71,20 @@ def main(argv=None):
                     help="downlink dfx codec (default: same as --codec)")
     ap.add_argument("--link-trace", default="",
                     help="JSON LinkTrace file (default: static Table-1)")
+    # round loop (repro.core.driver)
+    ap.add_argument("--exec-mode", default="sync",
+                    choices=["sync", "semi_async"],
+                    help="round clock: Eq.-1 barrier vs event-queue "
+                         "straggler overlap")
+    ap.add_argument("--staleness-cap", type=int, default=1,
+                    help="semi_async: max rounds an update may lag "
+                         "(0 degenerates to sync)")
+    ap.add_argument("--quorum", type=float, default=0.5,
+                    help="semi_async: arrival fraction that closes the "
+                         "aggregation window")
+    ap.add_argument("--predictive", action="store_true",
+                    help="sliding scheduler forecasts the link rate at "
+                         "the projected completion time")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -85,12 +99,15 @@ def main(argv=None):
     ccfg = CommConfig(codec=args.codec, grad_codec=args.grad_codec,
                       link="trace" if args.link_trace else "static",
                       trace_file=args.link_trace)
+    dcfg = DriverConfig(exec_mode=args.exec_mode,
+                        staleness_cap=args.staleness_cap,
+                        quorum=args.quorum, predictive=args.predictive)
     ecfg = EngineConfig(
         mode=args.mode, rounds=args.rounds,
         clients_per_round=args.per_round, batch_size=args.batch_size,
         local_steps=args.local_steps, lr=args.lr, seed=args.seed,
         use_balance=not args.no_balance, use_sliding=not args.no_sliding,
-        n_classes=n_classes, comm=ccfg)
+        n_classes=n_classes, comm=ccfg, driver=dcfg)
     eng = S2FLEngine(model, fed, ecfg)
     t0 = time.time()
     eng.run(eval_data=test, eval_every=args.eval_every, verbose=True)

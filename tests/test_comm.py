@@ -236,7 +236,9 @@ def test_engine_int8_cuts_comm_while_learning():
 def test_trace_link_changes_scheduler_assignments():
     """Acceptance: under a fading trace the client time table sees
     different Eq.-1 times, so post-warmup split assignments differ from
-    the static link's. Pure Eq.-1 simulation on VGG16 costs."""
+    the static link's. Pure Eq.-1 simulation on VGG16 costs, driven by
+    the shared RoundDriver."""
+    from repro.core.driver import AnalyticCost, RoundDriver
     from repro.core.scheduler import SlidingSplitScheduler
     from repro.core.split import default_plan
     from repro.models import SplitModel
@@ -246,26 +248,13 @@ def test_trace_link_changes_scheduler_assignments():
     plan = default_plan(model.n_units, k=3)
     costs = {s: split_costs(model, s) for s in plan.split_points}
     devices = make_device_grid(9, seed=0)
-    p = 32
 
     def final_assignment(link):
         ch = CommChannel(codec="fp32", link=link)
         sched = SlidingSplitScheduler(plan)
-        clock = 0.0
+        drv = RoundDriver(sched, AnalyticCost(ch, costs, p=32), devices)
         for r in range(plan.k + 3):
-            sel = (dict.fromkeys((d.cid for d in devices),
-                                 sched.warmup_split())
-                   if sched.warming_up
-                   else sched.select([d.cid for d in devices]))
-            times = {}
-            for d in devices:
-                c = costs[sel[d.cid]]
-                times[d.cid], _ = ch.analytic_round_time(
-                    d, wc_size=c["wc_size"], n_values=p * c["feat_size"],
-                    fc=p * c["fc"], fs=p * c["fs"], t=clock)
-                sched.observe(d.cid, sel[d.cid], times[d.cid])
-            clock += max(times.values())
-            sched.end_round()
+            drv.run_round(devices)
         return sched.select([d.cid for d in devices])
 
     static = final_assignment(StaticLink())

@@ -142,17 +142,26 @@ def test_fixed_scheduler_is_largest_split():
 # Eq. 1 simulation
 # ---------------------------------------------------------------------------
 def test_eq1_straggler_vs_fast_device():
+    from repro.core.simulation import BYTES_PER_ELEM, device_round_time_bytes
+
+    def t_of(dev, *, wc_size, feat_size, p, fc, fs):
+        nbytes = (2.0 * wc_size + 2.0 * p * feat_size) * BYTES_PER_ELEM
+        return device_round_time_bytes(dev, comm_bytes=nbytes, fc=fc, fs=fs)
+
     slow = Device(0, comp=5e9, rate=1e6)
     fast = Device(1, comp=2e10, rate=5e6)
-    t_slow = device_round_time(slow, wc_size=1e6, feat_size=1e4, p=32,
-                               fc=1e10, fs=1e10)
-    t_fast = device_round_time(fast, wc_size=1e6, feat_size=1e4, p=32,
-                               fc=1e10, fs=1e10)
+    t_slow = t_of(slow, wc_size=1e6, feat_size=1e4, p=32, fc=1e10, fs=1e10)
+    t_fast = t_of(fast, wc_size=1e6, feat_size=1e4, p=32, fc=1e10, fs=1e10)
     assert t_slow > t_fast
     # smaller portion shrinks the slow device's time
-    t_slow_small = device_round_time(slow, wc_size=1e5, feat_size=1e4, p=32,
-                                     fc=1e9, fs=1.9e10)
+    t_slow_small = t_of(slow, wc_size=1e5, feat_size=1e4, p=32,
+                        fc=1e9, fs=1.9e10)
     assert t_slow_small < t_slow
+    # the element-based seed helper agrees (and is formally deprecated)
+    with pytest.warns(DeprecationWarning):
+        legacy = device_round_time(slow, wc_size=1e6, feat_size=1e4, p=32,
+                                   fc=1e10, fs=1e10)
+    assert legacy == pytest.approx(t_slow)
 
 
 def test_device_grid_covers_table1():

@@ -61,8 +61,9 @@ def test_scheduler_beats_fixed_split_on_vgg16_clock():
     feature maps are big, so small client portions increase feature-upload
     time; see benchmarks/time_comm.py for the per-model discussion.
     """
+    from repro.comm import CommChannel
     from repro.core.scheduler import SlidingSplitScheduler
-    from repro.core.simulation import device_round_time, make_device_grid
+    from repro.core.simulation import make_device_grid
     from repro.core.split import default_plan
     from repro.utils.flops import split_costs
 
@@ -71,12 +72,15 @@ def test_scheduler_beats_fixed_split_on_vgg16_clock():
     costs = {s: split_costs(model, s) for s in plan.split_points}
     devices = make_device_grid(9, seed=0)
     p = 32
+    ch = CommChannel()
 
     def t_of(dev, s):
         c = costs[s]
-        return device_round_time(dev, wc_size=c["wc_size"],
-                                 feat_size=c["feat_size"], p=p,
-                                 fc=p * c["fc"], fs=p * c["fs"])
+        t, _ = ch.analytic_round_time(dev, wc_size=c["wc_size"],
+                                      n_values=p * c["feat_size"],
+                                      fc=p * c["fc"], fs=p * c["fs"],
+                                      t=0.0)
+        return t
 
     # SFL: everyone trains the largest portion
     sfl_wall = max(t_of(d, plan.largest()) for d in devices)

@@ -1,8 +1,11 @@
 """Scheduler variants: paper median-matching vs beyond-paper min-time,
-including the non-monotone-time regime where median matching loses."""
+including the non-monotone-time regime where median matching loses.
+Rounds are driven through the shared RoundDriver (CallableCost adapts a
+plain t_of(cid, split) table)."""
 import numpy as np
 import pytest
 
+from repro.core.driver import CallableCost, RoundDriver
 from repro.core.scheduler import (FixedSplitScheduler, MinTimeScheduler,
                                   SlidingSplitScheduler)
 from repro.core.split import SplitPlan
@@ -10,19 +13,12 @@ from repro.core.split import SplitPlan
 
 def _run(sched, devices, t_of, rounds=8):
     """devices: ids; t_of(cid, split). Returns post-warmup wall clock."""
+    drv = RoundDriver(sched, CallableCost(t_of), devices)
     wall = 0.0
     for r in range(rounds):
-        if sched.warming_up:
-            s = sched.warmup_split()
-            for c in devices:
-                sched.observe(c, s, t_of(c, s))
-        sel = sched.select(devices)
-        ts = {c: t_of(c, sel[c]) for c in devices}
-        for c in devices:
-            sched.observe(c, sel[c], ts[c])
-        if not getattr(sched, "warming_up", False) or r >= sched.plan.k:
-            wall += max(ts.values())
-        sched.end_round()
+        rec = drv.run_round(devices)
+        if r >= sched.plan.k:            # §3.1 warm-up rounds excluded
+            wall += rec.round_time
     return wall
 
 
@@ -82,20 +78,21 @@ def test_mintime_falls_back_to_smallest_for_unmeasured():
 
 def test_warmup_traverses_all_splits_once_per_cycle():
     """§3.1: the K warm-up rounds dispatch each candidate split exactly
-    once (all clients share the split within a round)."""
+    once (all clients share the split within a round) — observed through
+    the driver's per-round split record."""
     plan = SplitPlan(n_units=10, split_points=(1, 3, 5))
     for cls in (SlidingSplitScheduler, MinTimeScheduler):
         sched = cls(plan)
+        drv = RoundDriver(sched, CallableCost(lambda c, s: 1.0 + s),
+                          [0, 1, 2])
         seen = []
-        while sched.warming_up:
-            s = sched.warmup_split()
-            sel = sched.select([0, 1, 2])
-            assert set(sel.values()) == {s}         # same split for all
-            seen.append(s)
-            sched.end_round()
+        for r in range(plan.k):
+            rec = drv.run_round([0, 1, 2])
+            assert len(set(rec.splits.values())) == 1   # shared split
+            seen.append(next(iter(rec.splits.values())))
         assert seen == list(plan.split_points)      # each exactly once
         assert len(seen) == plan.k
-        assert not sched.warming_up
+        assert not sched.warming_up                 # table is warm now
 
 
 def test_fixed_scheduler_interface():
