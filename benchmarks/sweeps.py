@@ -1,8 +1,10 @@
 """Figures 5/6/7 — configuration sweeps on the Eq.-1 simulated clock:
   fig5: number of participating devices x in {5, 10, 15, 20}
   fig6: device compositions High:Mid:Low = 5:3:2 vs 2:3:5, plus the
-        sync vs semi_async round-clock comparison (event-queue straggler
-        overlap) on the straggler-heavy 2:3:5 mix
+        sync vs semi_async vs phase-pipelined round-clock comparison on
+        the straggler-heavy 2:3:5 mix (the pipelined timeline commits a
+        group at the end of its server compute, so uploads/backwards/
+        downloads of different devices overlap)
   fig7: client-set size |C| in {20, 50, 100} at fixed 0.1 sampling
 
 The time/straggler effects are what Eq. 1 defines, so these sweeps report
@@ -16,7 +18,13 @@ import numpy as np
 from benchmarks.common import Timer, emit
 
 
-def _drivers(arch, n_devices, composition, seed, exec_mode, staleness_cap):
+def _sim(arch, n_devices, per_round, composition=None, rounds=20, seed=0,
+         variants=(("sync", 1, False),)):
+    """One SFL baseline plus one S²FL driver per (exec_mode,
+    staleness_cap, pipeline) variant, all driven over the SAME
+    participant draw — the model / split-cost / device-grid setup (the
+    expensive part: XLA cost analysis per split) is built exactly once.
+    Returns (sfl_clock, [s2_clock per variant])."""
     from repro.comm import CommChannel
     from repro.configs import get_config
     from repro.core.driver import AnalyticCost, RoundDriver
@@ -34,24 +42,20 @@ def _drivers(arch, n_devices, composition, seed, exec_mode, staleness_cap):
                                composition=composition)
     cost = AnalyticCost(CommChannel(), costs, p=128)
     sfl = RoundDriver(FixedSplitScheduler(plan), cost, devices)
-    s2 = RoundDriver(SlidingSplitScheduler(plan), cost, devices,
-                     mode=exec_mode, staleness_cap=staleness_cap)
-    return devices, sfl, s2
-
-
-def _sim(arch, n_devices, per_round, composition=None, rounds=20, seed=0,
-         exec_mode="sync", staleness_cap=1):
-    devices, sfl, s2 = _drivers(arch, n_devices, composition, seed,
-                                exec_mode, staleness_cap)
+    s2s = [RoundDriver(SlidingSplitScheduler(plan), cost, devices,
+                       mode=m, staleness_cap=sc, pipeline=pl)
+           for m, sc, pl in variants]
     rng = np.random.default_rng(seed)
     for r in range(rounds):
         part = rng.choice(devices, size=per_round, replace=False)
         sfl.run_round(part)
-        s2.run_round(part)
-    # wait out in-flight semi_async stragglers so both clocks cover the
-    # same completed work (sync already has an empty heap)
-    s2.flush()
-    return sfl.clock, s2.clock
+        for drv in s2s:
+            drv.run_round(part)
+    # wait out in-flight semi_async stragglers and draining downloads so
+    # every clock covers the same completed work (sync: empty heaps)
+    for drv in s2s:
+        drv.flush()
+    return sfl.clock, [drv.clock for drv in s2s]
 
 
 def run(quick: bool = False):
@@ -61,39 +65,48 @@ def run(quick: bool = False):
     # fig 5: x devices per round
     for x in ((5, 10) if quick else (5, 10, 15, 20)):
         with Timer() as t:
-            sfl, s2 = _sim("vgg16", n_devices=n_dev, per_round=x,
-                           rounds=rounds)
+            sfl, (s2,) = _sim("vgg16", n_devices=n_dev, per_round=x,
+                              rounds=rounds)
         emit(f"fig5.devices_{x}", t.us,
              f"sfl_clock={sfl:.1f};s2fl_clock={s2:.1f};"
              f"speedup={sfl / s2:.2f}x")
 
-    # fig 6: compositions, plus the event-queue execution modes on each
-    # mix — semi_async closes the aggregation window at the quorum
-    # arrival instead of the Eq.-1 max() barrier, so on the
-    # straggler-heavy 2:3:5 grid it must never lose to sync
+    # fig 6: compositions, plus the execution modes on each mix —
+    # semi_async closes the aggregation window at the quorum arrival
+    # instead of the Eq.-1 max() barrier, and the phase pipeline commits
+    # at server-compute completion (uploads/downloads overlap), so on
+    # the straggler-heavy 2:3:5 grid the ordering
+    # pipelined <= phase-sequential <= sync must hold
     for name, comp in (("5:3:2", {"high": 5, "mid": 3, "low": 2}),
                        ("2:3:5", {"high": 2, "mid": 3, "low": 5})):
         with Timer() as t:
-            sfl, s2 = _sim("vgg16", n_devices=n_dev, per_round=10,
-                           composition=comp, rounds=rounds)
-            _, s2_async = _sim("vgg16", n_devices=n_dev, per_round=10,
-                               composition=comp, rounds=rounds,
-                               exec_mode="semi_async", staleness_cap=1)
+            sfl, (s2, s2_async, s2_pipe) = _sim(
+                "vgg16", n_devices=n_dev, per_round=10,
+                composition=comp, rounds=rounds,
+                variants=(("sync", 1, False),
+                          ("semi_async", 1, False),
+                          ("semi_async", 1, True)))
         async_speedup = s2 / s2_async
+        pipe_speedup = s2_async / s2_pipe
         emit(f"fig6.comp_{name}", t.us,
              f"sfl_clock={sfl:.1f};s2fl_clock={s2:.1f};"
              f"speedup={sfl / s2:.2f}x;"
              f"s2fl_async_clock={s2_async:.1f};"
-             f"async_vs_sync={async_speedup:.2f}x")
+             f"async_vs_sync={async_speedup:.2f}x;"
+             f"s2fl_pipe_clock={s2_pipe:.1f};"
+             f"pipe_vs_seq={pipe_speedup:.2f}x")
         if name == "2:3:5":
-            # acceptance: straggler overlap can only help the clock
+            # acceptance: straggler overlap can only help the clock, and
+            # phase overlap can only help further:
+            # pipelined <= phase-sequential <= sync
             assert async_speedup >= 1.0, (s2, s2_async)
+            assert pipe_speedup >= 1.0, (s2_async, s2_pipe)
 
     # fig 7: |C| at 0.1 sampling
     for C in ((20,) if quick else (20, 50, 100)):
         with Timer() as t:
-            sfl, s2 = _sim("vgg16", n_devices=C,
-                           per_round=max(2, C // 10), rounds=rounds)
+            sfl, (s2,) = _sim("vgg16", n_devices=C,
+                              per_round=max(2, C // 10), rounds=rounds)
         emit(f"fig7.clientset_{C}", t.us,
              f"sfl_clock={sfl:.1f};s2fl_clock={s2:.1f};"
              f"speedup={sfl / s2:.2f}x")

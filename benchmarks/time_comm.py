@@ -9,8 +9,10 @@ path (comm is wire BYTES, fp32 analytic payloads — the legacy
 element-based helpers in core/simulation.py are deprecated). Reported:
 per-round wall time + comm for each method and the S²FL/SFL and
 S²FL/FedAvg speedups (the paper reports 3.54x time and 2.57x comm on
-VGG16 at a=0.5), plus the sync vs semi_async round clock of the S²FL
-schedule.
+VGG16 at a=0.5), plus the sync vs semi_async vs phase-pipelined round
+clock of the S²FL schedule (the pipeline commits a group at the end of
+its server compute so uploads/backwards/downloads overlap across
+devices; a contended column prices the shared Main-Server ingress).
 
 Additionally (`sweep`): the repro.comm codec x link grid — for every
 payload codec (fp32 / bf16 / fp16 / int8) and link model (static Table-1
@@ -27,7 +29,7 @@ from repro.configs import get_config
 from repro.core.driver import AnalyticCost, FedAvgCost, RoundDriver
 from repro.core.scheduler import (FixedSplitScheduler, MinTimeScheduler,
                                   SlidingSplitScheduler)
-from repro.core.simulation import make_device_grid
+from repro.core.simulation import SERVER_RATE, make_device_grid
 from repro.core.split import default_plan
 from repro.models import SplitModel
 from repro.utils.flops import split_costs
@@ -38,7 +40,10 @@ def simulate(arch: str = "vgg16", *, n_devices: int = 100,
              seed: int = 0):
     """FedAvg vs SFL vs S²FL (median + beyond-paper min-time) on the
     static Table-1 grid. Returns {method: (clock, comm_bytes)} plus the
-    semi_async S²FL clock under 's2fl_async'."""
+    semi_async S²FL clock under 's2fl_async', the phase-pipelined clock
+    under 's2fl_pipe', and the pipelined clock with a contended
+    Main-Server ingress (capacity = one Table-1 server uplink shared by
+    the whole cohort) under 's2fl_pipe_contended'."""
     model = SplitModel(get_config(arch))
     plan = default_plan(model.n_units, k=3)
     costs = {s: split_costs(model, s) for s in plan.split_points}
@@ -46,10 +51,11 @@ def simulate(arch: str = "vgg16", *, n_devices: int = 100,
     devices = make_device_grid(n_devices, seed=seed)
 
     def make(name):
-        cost = AnalyticCost(CommChannel(), costs, p=p)
         if name == "fedavg":
             return RoundDriver(FixedSplitScheduler(plan),
                                FedAvgCost(full, p=p), devices)
+        cap = SERVER_RATE if name == "s2fl_pipe_contended" else 0.0
+        cost = AnalyticCost(CommChannel(uplink_capacity=cap), costs, p=p)
         if name == "sfl":
             return RoundDriver(FixedSplitScheduler(plan), cost, devices)
         if name == "s2fl_mintime":
@@ -57,17 +63,22 @@ def simulate(arch: str = "vgg16", *, n_devices: int = 100,
         if name == "s2fl_async":
             return RoundDriver(SlidingSplitScheduler(plan), cost, devices,
                                mode="semi_async", staleness_cap=1)
+        if name in ("s2fl_pipe", "s2fl_pipe_contended"):
+            return RoundDriver(SlidingSplitScheduler(plan), cost, devices,
+                               mode="semi_async", staleness_cap=1,
+                               pipeline=True)
         return RoundDriver(SlidingSplitScheduler(plan), cost, devices)
 
     out = {}
-    for name in ("fedavg", "sfl", "s2fl", "s2fl_mintime", "s2fl_async"):
+    for name in ("fedavg", "sfl", "s2fl", "s2fl_mintime", "s2fl_async",
+                 "s2fl_pipe", "s2fl_pipe_contended"):
         drv = make(name)
         rng = np.random.default_rng(seed)
         for r in range(rounds):
             part = rng.choice(devices, size=per_round, replace=False)
             drv.run_round(part)
-        # semi_async: include the straggler tail so every method's clock
-        # covers the same completed work
+        # semi_async/pipeline: include the straggler tail and draining
+        # downloads so every method's clock covers the same work
         drv.flush()
         out[name] = (drv.clock, drv.comm)
     return out
@@ -133,19 +144,31 @@ def run(quick: bool = False):
         sp_ft = res["fedavg"][0] / res["s2fl"][0]
         sp_mt = res["sfl"][0] / res["s2fl_mintime"][0]
         sp_async = res["s2fl"][0] / res["s2fl_async"][0]
+        sp_pipe = res["s2fl_async"][0] / res["s2fl_pipe"][0]
+        sp_cont = res["s2fl_pipe_contended"][0] / res["s2fl_pipe"][0]
         emit(f"table3.{arch}.speedup", t.us / 3,
              f"s2fl_vs_sfl_time={sp_t:.2f}x;s2fl_vs_sfl_comm={sp_c:.2f}x;"
              f"s2fl_vs_fedavg_time={sp_ft:.2f}x;"
              f"mintime_vs_sfl_time={sp_mt:.2f}x;"
-             f"async_vs_sync_time={sp_async:.2f}x")
+             f"async_vs_sync_time={sp_async:.2f}x;"
+             f"pipe_vs_seq_time={sp_pipe:.2f}x;"
+             f"contention_slowdown={sp_cont:.2f}x")
         if arch == "vgg16":
             # paper regime: S²FL strictly faster than SFL, SFL than FedAvg
             assert sp_t > 1.0 and sp_ft > 1.0
         # beyond-paper scheduler never loses to the paper's on wall clock
         assert res["s2fl_mintime"][0] <= res["s2fl"][0] * 1.02, arch
         # event-queue overlap can only help the clock (static Table-1
-        # link: each window closes at or before the sync barrier)
+        # link: each window closes at or before the sync barrier), and
+        # phase overlap can only help further
         assert sp_async >= 1.0, arch
+        assert sp_pipe >= 1.0, arch
+        # contention slows the clock when the SCHEDULE is held fixed
+        # (the exact theorem lives in tests/test_driver_properties.py
+        # on a FixedSplitScheduler); here the sliding scheduler adapts
+        # to the stretched times it observes, so allow it a small
+        # legitimate mitigation margin rather than pinning >= 1.0
+        assert sp_cont >= 0.95, arch
 
 
 if __name__ == "__main__":

@@ -2,9 +2,11 @@
 
 See README.md in this package for the design (codec interface,
 link-trace format, byte-accounting convention)."""
-from repro.comm.channel import AUX_BYTES, CommChannel  # noqa: F401
+from repro.comm.channel import (AUX_BYTES, MESSAGES_PER_ROUND,  # noqa: F401
+                                CommChannel)
 from repro.comm.codecs import Codec, get_codec, list_codecs  # noqa: F401
-from repro.comm.links import LinkTrace, StaticLink, get_link  # noqa: F401
+from repro.comm.links import (LinkTrace, StaticLink, get_link,  # noqa: F401
+                              shared_link_finish_times)
 
 
 def make_channel(ccfg=None) -> CommChannel:
@@ -24,4 +26,6 @@ def make_channel(ccfg=None) -> CommChannel:
     else:
         link = get_link(ccfg.link)
     return CommChannel(codec=ccfg.codec, grad_codec=ccfg.grad_codec,
-                       link=link)
+                       link=link, latency=getattr(ccfg, "latency", 0.0),
+                       uplink_capacity=getattr(ccfg, "uplink_capacity",
+                                               0.0))

@@ -12,6 +12,21 @@ Byte convention (comm/README.md): payload bytes are exact from the
 encoded arrays; model dispatch/collection is fp32, i.e.
 ``elements * BYTES_PER_ELEM`` — codecs apply to the cut-layer exchange
 only, matching the paper's Eq.-1 structure.
+
+Two transport-delay knobs ride on the channel (both default off, so the
+fp32/static seed regime is untouched):
+
+``latency``          per-message seconds. A device-round exchanges four
+                     messages (Wc dispatch, features up, gradients down,
+                     Wc collect), so the atomic Eq.-1 time gains
+                     ``4 * latency``; the phase pipeline charges two
+                     latencies to the upload phase and two to the
+                     download phase.
+``uplink_capacity``  the Main Server's shared ingress in Table-1
+                     elements/s (0 = uncontended). Only the phase-level
+                     pipeline can observe overlap, so contention prices
+                     only pipelined timelines — see
+                     ``links.shared_link_finish_times``.
 """
 from __future__ import annotations
 
@@ -19,10 +34,12 @@ from repro.comm.codecs import Codec, get_codec
 from repro.comm.links import StaticLink
 
 AUX_BYTES = 4.0          # the scalar aux-loss rider on each feature msg
+MESSAGES_PER_ROUND = 4   # dispatch, features up, grads down, collect
 
 
 class CommChannel:
-    def __init__(self, codec="fp32", grad_codec=None, link=None):
+    def __init__(self, codec="fp32", grad_codec=None, link=None, *,
+                 latency: float = 0.0, uplink_capacity: float = 0.0):
         self.feature_codec = (codec if isinstance(codec, Codec)
                               else get_codec(codec))
         if grad_codec is None or grad_codec == "":
@@ -30,12 +47,21 @@ class CommChannel:
         self.grad_codec = (grad_codec if isinstance(grad_codec, Codec)
                            else get_codec(grad_codec))
         self.link = link or StaticLink()
+        if latency < 0:
+            raise ValueError(f"latency must be >= 0: {latency}")
+        if uplink_capacity < 0:
+            raise ValueError(
+                f"uplink_capacity must be >= 0 (0 = uncontended): "
+                f"{uplink_capacity}")
+        self.latency = float(latency)
+        self.uplink_capacity = float(uplink_capacity)
         self.up_bytes = 0.0          # device -> server (features)
         self.down_bytes = 0.0        # server -> device (dfx)
-        self._round = {}             # cid -> payload bytes this round
+        self._round_up = {}          # cid -> uplink payload bytes this round
+        self._round_down = {}        # cid -> downlink payload bytes
 
     # ------------------------------------------------------------ wire
-    def _xfer(self, codec, cid, msg):
+    def _xfer(self, codec, cid, msg, meter):
         """msg: {'h': tensor, ...riders} or bare tensor."""
         if isinstance(msg, dict):
             h, nbytes = codec.roundtrip(msg["h"])
@@ -43,19 +69,21 @@ class CommChannel:
             nbytes += AUX_BYTES * (len(msg) - 1)
         else:
             out, nbytes = codec.roundtrip(msg)
-        self._round[cid] = self._round.get(cid, 0.0) + nbytes
+        meter[cid] = meter.get(cid, 0.0) + nbytes
         return out, nbytes
 
     def uplink_features(self, cid, feats):
         """Device cid uploads its cut-layer features. Returns what the
         server receives (codec round-trip applied)."""
-        out, nbytes = self._xfer(self.feature_codec, cid, feats)
+        out, nbytes = self._xfer(self.feature_codec, cid, feats,
+                                 self._round_up)
         self.up_bytes += nbytes
         return out
 
     def downlink_grads(self, cid, dfx):
         """Server returns the feature gradient to device cid."""
-        out, nbytes = self._xfer(self.grad_codec, cid, dfx)
+        out, nbytes = self._xfer(self.grad_codec, cid, dfx,
+                                 self._round_down)
         self.down_bytes += nbytes
         return out
 
@@ -66,10 +94,31 @@ class CommChannel:
 
     def round_payload(self, cid) -> float:
         """Exact payload bytes metered for cid since the last reset."""
-        return self._round.get(cid, 0.0)
+        return self._round_up.get(cid, 0.0) \
+            + self._round_down.get(cid, 0.0)
+
+    def round_payload_split(self, cid):
+        """(uplink, downlink) payload bytes metered for cid this round —
+        the per-direction split the phase pipeline prices."""
+        return (self._round_up.get(cid, 0.0),
+                self._round_down.get(cid, 0.0))
 
     def reset_round(self):
-        self._round = {}
+        self._round_up = {}
+        self._round_down = {}
+
+    def estimate_uplink_payload(self, n_values: float,
+                                last_dim: int = 0) -> float:
+        """Analytic uplink (feature) payload bytes for n_values cut-layer
+        elements — the upload phase's wire traffic."""
+        return self.feature_codec.estimate_bytes(n_values, last_dim) \
+            + AUX_BYTES
+
+    def estimate_downlink_payload(self, n_values: float,
+                                  last_dim: int = 0) -> float:
+        """Analytic downlink (feature-gradient) payload bytes."""
+        return self.grad_codec.estimate_bytes(n_values, last_dim) \
+            + AUX_BYTES
 
     def estimate_round_payload(self, n_values: float,
                                last_dim: int = 0) -> float:
@@ -90,9 +139,10 @@ class CommChannel:
                                            model_dispatch_bytes)
         nbytes = model_dispatch_bytes(wc_size=wc_size) \
             + self.estimate_round_payload(n_values)
-        return device_round_time_bytes(dev, comm_bytes=nbytes, fc=fc,
-                                       fs=fs, rate=self.rate(dev, t)), \
-            nbytes
+        t_round = device_round_time_bytes(dev, comm_bytes=nbytes, fc=fc,
+                                          fs=fs, rate=self.rate(dev, t)) \
+            + MESSAGES_PER_ROUND * self.latency
+        return t_round, nbytes
 
     def rate(self, dev, t: float) -> float:
         return self.link.rate(dev, t)

@@ -1,4 +1,5 @@
-"""Link models — what transfer rate a device sees at simulated time t.
+"""Link models — what transfer rate a device sees at simulated time t —
+plus the shared-uplink contention scheduler.
 
 ``StaticLink`` is the paper's Table-1 regime (each device keeps its fixed
 elements/s rate forever). ``LinkTrace`` is trace-driven: a
@@ -13,11 +14,20 @@ at 0.0 and same-length ``multipliers``; segment i covers
 ``times[-1]`` extended by the previous segment's width, so the final
 multiplier always gets a non-empty segment). JSON traces are
 ``{"times": [...], "multipliers": [...], "period": ...}``.
+
+``shared_link_finish_times`` is the contention model for the phase-level
+pipeline (core/driver.py): concurrent uploads to the Main Server share a
+finite ingress capacity, split max-min fairly among the active transfers
+with each transfer also capped by its device's own link rate. It is a
+fluid (processor-sharing) simulation: whenever a transfer starts or
+finishes the fair shares are recomputed, so an upload that overlaps many
+others is stretched exactly by the observed congestion.
 """
 from __future__ import annotations
 
 import bisect
 import json
+import math
 
 import numpy as np
 
@@ -132,6 +142,75 @@ class LinkTrace:
         mult = np.exp(rng.uniform(np.log(lo), np.log(hi), n_segments))
         return cls(times, mult.tolist(), period=period,
                    per_device_phase=per_device_phase)
+
+
+# ---------------------------------------------------------------------------
+# shared-uplink contention (the phase pipeline's upload scheduler)
+# ---------------------------------------------------------------------------
+def _maxmin_rates(active, caps, capacity):
+    """Max-min fair allocation of ``capacity`` among ``active`` jobs,
+    each additionally capped by its own ``caps[i]`` rate: jobs are
+    water-filled from the smallest cap up, so a slow device never blocks
+    a fast one from using the leftover capacity."""
+    if math.isinf(capacity):
+        return {i: caps[i] for i in active}
+    rates = {}
+    left, k = capacity, len(active)
+    for i in sorted(active, key=lambda j: caps[j]):
+        r = min(caps[i], left / k)
+        rates[i] = r
+        left -= r
+        k -= 1
+    return rates
+
+
+def shared_link_finish_times(jobs, capacity=math.inf):
+    """Finish times of transfer jobs on a shared link (fluid max-min
+    fair processor sharing).
+
+    jobs: sequence of ``(arrival_s, size_bytes, own_rate_bytes_per_s)``;
+    capacity: the link's total bytes/s (``math.inf`` = uncontended, each
+    job runs at its own rate). Returns finish times in job order. With
+    infinite capacity this degenerates exactly to
+    ``arrival + size / own_rate``.
+    """
+    n = len(jobs)
+    if n == 0:
+        return []
+    if capacity <= 0:
+        raise ValueError(f"shared link capacity must be > 0: {capacity}")
+    arrive = [float(a) for a, _, _ in jobs]
+    left = [float(b) for _, b, _ in jobs]
+    caps = [float(r) for _, _, r in jobs]
+    if any(r <= 0 for r in caps):
+        raise ValueError(f"job rate caps must be > 0: {caps}")
+    finish = [0.0] * n
+    done_eps = [max(1e-9, 1e-12 * b) for b in left]
+    todo = set(range(n))
+    for i in list(todo):               # zero-byte jobs land on arrival
+        if left[i] <= done_eps[i]:
+            finish[i] = arrive[i]
+            todo.discard(i)
+    if not todo:
+        return finish
+    t = min(arrive[i] for i in todo)
+    while todo:
+        active = [i for i in todo if arrive[i] <= t]
+        if not active:
+            t = min(arrive[i] for i in todo)
+            continue
+        rates = _maxmin_rates(active, caps, capacity)
+        t_fin = min(t + left[i] / rates[i] for i in active)
+        future = [arrive[i] for i in todo if arrive[i] > t]
+        t_next = min([t_fin] + ([min(future)] if future else []))
+        for i in active:
+            left[i] -= rates[i] * (t_next - t)
+        t = t_next
+        for i in active:
+            if left[i] <= done_eps[i]:
+                finish[i] = t
+                todo.discard(i)
+    return finish
 
 
 def get_link(name: str = "static", **kw):

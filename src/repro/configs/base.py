@@ -139,7 +139,10 @@ class CommConfig:
     feature-gradients ('' -> same as ``codec``). ``link`` selects the
     rate model: 'static' (Table 1) or 'trace' (time-varying multiplier
     schedule — inline via trace_* fields or a JSON file, see
-    comm/README.md)."""
+    comm/README.md). ``latency`` adds a fixed per-message delay (four
+    messages per device-round); ``uplink_capacity`` bounds the Main
+    Server's shared ingress (Table-1 elements/s, 0 = uncontended) —
+    concurrent uploads in the phase pipeline then contend for it."""
 
     codec: str = "fp32"                 # fp32 | bf16 | fp16 | int8
     grad_codec: str = ""                # '' -> follow codec
@@ -149,6 +152,8 @@ class CommConfig:
     trace_period: float = 0.0           # 0 -> trace_times[-1]
     trace_phase_per_device: bool = True
     trace_file: str = ""                # JSON overrides the inline trace
+    latency: float = 0.0                # seconds per message
+    uplink_capacity: float = 0.0        # shared elements/s; 0 = off
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,12 +166,17 @@ class DriverConfig:
     ``quorum`` fraction of this round's arrivals and stragglers commit
     up to ``staleness_cap`` rounds late (0 degenerates to sync).
     ``predictive`` makes the sliding scheduler re-price its EMA table
-    with the link model's rate over the projected completion window."""
+    with the link model's rate over the projected completion window.
+    ``pipeline`` splits each device-round into upload / server-compute /
+    download phase events: a group's update commits when its server
+    backward finishes (downloads drain in the background), and
+    concurrent uploads contend for ``CommConfig.uplink_capacity``."""
 
     exec_mode: str = "sync"             # sync | semi_async
     staleness_cap: int = 1              # max rounds an update may lag
     quorum: float = 0.5                 # window-close arrival fraction
     predictive: bool = False            # link-aware split forecasts
+    pipeline: bool = False              # phase-level event pipeline
 
 
 def make_reduced(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 256,

@@ -6,8 +6,10 @@ Three layers:
 
 ``CostModel``
     What a device-round costs: ``time_and_bytes(dev, split, clock)`` →
-    Eq.-1 wall time + wire bytes. ``AnalyticCost`` prices payloads with
-    the channel's analytic codec estimates (the benchmark/tests path);
+    Eq.-1 wall time + wire bytes, and ``phase_cost(...)`` → the
+    upload / server-compute / download decomposition the pipelined
+    timeline schedules. ``AnalyticCost`` prices payloads with the
+    channel's analytic codec estimates (the benchmark/tests path);
     ``MeteredCost`` uses the exact bytes the ``CommChannel`` metered
     while real tensors crossed it (the ``S2FLEngine`` path); and
     ``FedAvgCost`` prices the full-model baseline. ``CallableCost``
@@ -35,12 +37,37 @@ Execution modes (the clock semantics):
                    static link semi_async wall-clock never exceeds sync
                    (each window closes at or before the sync barrier).
 
+Phase pipeline (``pipeline=True``, orthogonal to the exec mode): each
+device-round is split into three chained phase events instead of one
+atomic Eq.-1 event —
+
+    upload          Wc dispatch + client forward + features over the
+                    uplink (concurrent uploads contend for the shared
+                    ingress capacity when the channel bounds it);
+    server compute  the group backward — the COMMIT event: windows
+                    close, staleness is accounted, and aggregation
+                    happens here;
+    download        feature gradients + client backward + Wc
+                    collection, draining in the background (tracked in
+                    a second heap; ``flush()`` waits them out so the
+                    final wall-clock is honest).
+
+Because an update commits when its server compute finishes rather than
+when its download lands, the server starts one group's backward while
+another group's upload is still in flight — with contention and latency
+off, every commit can only move earlier, so the pipelined wall-clock is
+a lower bound on the phase-sequential one (property-tested in
+tests/test_driver_properties.py).
+
 Predictive split selection: with ``predictive=True`` the driver installs
 a ``forecast`` hook on the scheduler — instead of trusting the EMA time
 table alone, each candidate time is re-priced with the link model's
 MEAN rate over the projected completion window ``[clock, clock + ema]``
 (``CommChannel.mean_rate`` → ``LinkTrace`` exact integral), so a fade
-that will hit mid-round is anticipated rather than discovered.
+that will hit mid-round is anticipated rather than discovered. When the
+channel bounds the shared uplink, the forecast rate is additionally
+capped at ``capacity / round_load`` — the contention-adjusted rate the
+device will actually see.
 
 See ``core/README.md`` for the design discussion.
 """
@@ -51,7 +78,10 @@ import heapq
 import math
 from typing import Callable, Optional
 
-from repro.core.simulation import (device_round_time_bytes,
+from repro.comm.channel import MESSAGES_PER_ROUND
+from repro.comm.links import shared_link_finish_times
+from repro.core.simulation import (BYTES_PER_ELEM, CLIENT_FWD_FRAC,
+                                   SERVER_FLOPS, device_round_time_bytes,
                                    fedavg_round_comm_bytes,
                                    fedavg_round_time, model_dispatch_bytes)
 
@@ -66,6 +96,23 @@ def _cid(dev):
 # ---------------------------------------------------------------------------
 # cost models
 # ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PhaseCost:
+    """One device-round decomposed for the pipelined timeline.
+
+    Transfer rates are frozen at the dispatch clock (piecewise-constant
+    traces make this exact within a segment); the feature upload is the
+    only segment that contends for the shared ingress, so it is kept as
+    (bytes, own-rate) for the fluid scheduler while everything else is
+    already seconds."""
+    t_pre: float           # Wc dispatch transfer + client fwd (+ 2 lat)
+    up_bytes: float        # feature payload on the shared uplink
+    up_rate: float         # device's own uplink bytes/s at dispatch
+    t_srv: float           # server compute (the commit phase)
+    t_down: float          # dfx down + client bwd + Wc collect (+ 2 lat)
+    total_bytes: float     # full wire traffic (= the atomic accounting)
+
+
 class CostModel:
     """(time, bytes) of one device-round at simulated time ``clock``."""
 
@@ -73,10 +120,26 @@ class CostModel:
                        payload_bytes: Optional[float] = None):
         raise NotImplementedError
 
+    def phase_cost(self, dev, split: int, clock: float,
+                   up_payload: Optional[float] = None,
+                   down_payload: Optional[float] = None
+                   ) -> Optional[PhaseCost]:
+        """Upload/server/download decomposition for the pipelined
+        timeline (None -> no decomposition; the driver falls back to one
+        atomic event for this device — e.g. the FedAvg baseline, which
+        has no cut layer to pipeline around)."""
+        return None
+
+    def shared_uplink_bytes(self) -> float:
+        """Shared ingress capacity in bytes/s (inf = uncontended)."""
+        return math.inf
+
     def forecast_time(self, dev, split: int, clock: float,
-                      horizon: float) -> Optional[float]:
+                      horizon: float, load: int = 1) -> Optional[float]:
         """Predicted round time if dispatched now and finishing ~horizon
-        later (None -> no prediction, caller falls back to the EMA)."""
+        later (None -> no prediction, caller falls back to the EMA).
+        ``load`` is the number of devices expected to share the uplink
+        this round (contention-adjusts the forecast rate)."""
         return None
 
 
@@ -108,15 +171,51 @@ class AnalyticCost(CostModel):
             dev, wc_size=c["wc_size"], n_values=p * c["feat_size"],
             fc=p * c["fc"], fs=p * c["fs"], t=clock)
 
-    def forecast_time(self, dev, split, clock, horizon):
+    def phase_cost(self, dev, split, clock, up_payload=None,
+                   down_payload=None):
+        c, p = self.cost(split), self.p_of(_cid(dev))
+        ch = self.channel
+        rate = ch.rate(dev, clock) * BYTES_PER_ELEM
+        n_values = p * c["feat_size"]
+        up = (up_payload if up_payload is not None
+              else ch.estimate_uplink_payload(n_values))
+        down = (down_payload if down_payload is not None
+                else ch.estimate_downlink_payload(n_values))
+        wc_b = c["wc_size"] * BYTES_PER_ELEM      # one-way model transfer
+        fc, fs = p * c["fc"], p * c["fs"]
+        # half the round's messages ride each client-side phase, so the
+        # atomic and phase paths charge the same total latency
+        lat2 = 0.5 * MESSAGES_PER_ROUND * ch.latency
+        return PhaseCost(
+            t_pre=lat2 + wc_b / rate
+            + CLIENT_FWD_FRAC * fc / dev.comp,
+            up_bytes=up, up_rate=rate,
+            t_srv=fs / SERVER_FLOPS,
+            t_down=lat2 + (down + wc_b) / rate
+            + (1.0 - CLIENT_FWD_FRAC) * fc / dev.comp,
+            total_bytes=2.0 * wc_b + up + down)
+
+    def shared_uplink_bytes(self):
+        cap = getattr(self.channel, "uplink_capacity", 0.0)
+        return cap * BYTES_PER_ELEM if cap else math.inf
+
+    def forecast_time(self, dev, split, clock, horizon, load=1):
         c, p = self.cost(split), self.p_of(_cid(dev))
         nbytes = model_dispatch_bytes(wc_size=c["wc_size"]) \
             + self.channel.estimate_round_payload(p * c["feat_size"])
         rate = self.channel.mean_rate(dev, clock,
                                       clock + max(horizon, 1e-9))
+        cap = getattr(self.channel, "uplink_capacity", 0.0)
+        if cap:
+            # contention-adjusted: the shared ingress split across the
+            # round's cohort bounds what this device will actually see
+            # (even a solo upload is capped at the full ingress, exactly
+            # as the fluid schedule caps it)
+            rate = min(rate, cap / max(load, 1))
         return device_round_time_bytes(dev, comm_bytes=nbytes,
                                        fc=p * c["fc"], fs=p * c["fs"],
-                                       rate=rate)
+                                       rate=rate) \
+            + MESSAGES_PER_ROUND * self.channel.latency
 
 
 class MeteredCost(AnalyticCost):
@@ -132,12 +231,15 @@ class MeteredCost(AnalyticCost):
         nbytes = model_dispatch_bytes(wc_size=c["wc_size"]) + payload_bytes
         t = device_round_time_bytes(
             dev, comm_bytes=nbytes, fc=p * c["fc"], fs=p * c["fs"],
-            rate=self.channel.rate(dev, clock))
+            rate=self.channel.rate(dev, clock)) \
+            + MESSAGES_PER_ROUND * self.channel.latency
         return t, nbytes
 
 
 class FedAvgCost(CostModel):
-    """Full-model FedAvg baseline round cost (split is ignored)."""
+    """Full-model FedAvg baseline round cost (split is ignored). No cut
+    layer, so there is nothing to phase-split: under ``pipeline=True``
+    FedAvg rounds stay atomic events."""
 
     def __init__(self, costs_full, *, p: int = 128,
                  p_of: Optional[Callable] = None):
@@ -160,17 +262,27 @@ class FedAvgCost(CostModel):
 
 class CallableCost(CostModel):
     """Unit-test adapter: a plain ``t_of(cid, split)`` (clock-free) or
-    ``t_of(cid, split, clock)`` time function, optional byte function."""
+    ``t_of(cid, split, clock)`` time function, optional byte function,
+    optional ``phases_of(cid, split) -> PhaseCost`` for pipelined
+    tests."""
 
     def __init__(self, t_of: Callable, bytes_of: Optional[Callable] = None,
-                 *, clocked: bool = False):
+                 *, clocked: bool = False,
+                 phases_of: Optional[Callable] = None):
         self.t_of, self.bytes_of, self.clocked = t_of, bytes_of, clocked
+        self.phases_of = phases_of
 
     def time_and_bytes(self, dev, split, clock, payload_bytes=None):
         cid = _cid(dev)
         t = self.t_of(cid, split, clock) if self.clocked \
             else self.t_of(cid, split)
         return t, (self.bytes_of(cid, split) if self.bytes_of else 0.0)
+
+    def phase_cost(self, dev, split, clock, up_payload=None,
+                   down_payload=None):
+        if self.phases_of is None:
+            return None
+        return self.phases_of(_cid(dev), split)
 
 
 # ---------------------------------------------------------------------------
@@ -186,7 +298,11 @@ class RoundResult:
     times: dict                    # {cid: Eq.-1 device time}
     committed: tuple               # work keys whose updates commit now
     staleness: dict                # {key: rounds late} for committed keys
-    pending: int                   # events still in flight afterwards
+    pending: int                   # commit events still in flight after
+    phases: dict = dataclasses.field(default_factory=dict)
+    #                              # {cid: {'up','srv','down'} durations}
+    #                              # (pipelined rounds only)
+    downloads: int = 0             # download events still draining
 
 
 @dataclasses.dataclass(order=True)
@@ -206,12 +322,14 @@ class RoundDriver:
     devices   : Device objects (or bare cids with a CallableCost)
     warmup_devices : subset observed during warm-up rounds (default: all
                 devices — the engine restricts to devices that own data)
+    pipeline  : phase-level event timeline (upload / server-compute /
+                download) instead of one atomic event per device-round
     """
 
     def __init__(self, scheduler, cost: CostModel, devices, *,
                  mode: str = "sync", staleness_cap: int = 1,
                  quorum: float = 0.5, predictive: bool = False,
-                 warmup_devices=None):
+                 pipeline: bool = False, warmup_devices=None):
         if mode not in EXEC_MODES:
             raise ValueError(f"exec mode {mode!r}; known: {EXEC_MODES}")
         if staleness_cap < 0:
@@ -228,11 +346,14 @@ class RoundDriver:
         self.mode = mode
         self.staleness_cap = staleness_cap
         self.quorum = quorum
+        self.pipeline = bool(pipeline)
         self.clock = 0.0
         self.comm = 0.0                 # accumulated wire bytes
         self.round = 0
-        self._pending: list = []        # _Event heap (semi_async)
+        self._pending: list = []        # _Event heap (commit events)
+        self._downloads: list = []      # (ready, seq, cid) heap (pipeline)
         self._seq = 0
+        self._load = 1                  # current round's cohort size
         if predictive:
             if not hasattr(scheduler, "forecast"):
                 raise ValueError(
@@ -243,11 +364,13 @@ class RoundDriver:
     # -------------------------------------------------------- predictive
     def _forecast(self, cid, split, recorded):
         """Scheduler hook: re-price the EMA entry with the link's mean
-        rate over the projected completion window [clock, clock+ema]."""
+        rate over the projected completion window [clock, clock+ema],
+        contention-adjusted by the round's cohort size."""
         dev = self._dev_by_id.get(cid)
         if dev is None:
             return None
-        return self.cost.forecast_time(dev, split, self.clock, recorded)
+        return self.cost.forecast_time(dev, split, self.clock, recorded,
+                                       load=self._load)
 
     # ------------------------------------------------------------- round
     def run_round(self, participants, execute=None) -> RoundResult:
@@ -255,13 +378,16 @@ class RoundDriver:
 
         ``execute(splits) -> report`` (optional) runs the caller's real
         work after selection; the report dict may carry
-        ``payload_bytes`` ({cid: metered wire bytes, cut-layer only})
-        and ``groups`` ({work_key: (cid, ...)} — commit granularity;
-        default one work item per participant keyed by cid).
+        ``payload_bytes`` ({cid: metered wire bytes, cut-layer only}),
+        ``payload_up_bytes`` / ``payload_down_bytes`` (the per-direction
+        split the pipelined timeline prices) and ``groups``
+        ({work_key: (cid, ...)} — commit granularity; default one work
+        item per participant keyed by cid).
         """
         part = [_cid(p) for p in participants]
         part_set = set(part)
         clock0 = self.clock
+        self._load = max(1, len(part))
 
         # §3.1 warm-up: the shared split is dispatched to ALL devices so
         # the whole client time table fills; participants are observed
@@ -281,22 +407,32 @@ class RoundDriver:
 
         report = execute(splits) if execute is not None else None
         payloads = (report or {}).get("payload_bytes", {})
+        pay_up = (report or {}).get("payload_up_bytes", {})
+        pay_down = (report or {}).get("payload_down_bytes", {})
         groups = (report or {}).get("groups")
         if groups is None:
             groups = {c: (c,) for c in part}
 
-        times, comm = {}, 0.0
+        phases: dict = {}
+        if self.pipeline:
+            commits, times, comm, phases = self._phase_schedule(
+                part, splits, payloads, pay_up, pay_down, clock0)
+        else:
+            times, comm = {}, 0.0
+            for c in part:
+                dev = self._dev_by_id.get(c, c)
+                t, nbytes = self.cost.time_and_bytes(
+                    dev, splits[c], clock0, payload_bytes=payloads.get(c))
+                times[c] = t
+                comm += nbytes
+            commits = {c: clock0 + times[c] for c in part}
         for c in part:
-            dev = self._dev_by_id.get(c, c)
-            t, nbytes = self.cost.time_and_bytes(
-                dev, splits[c], clock0, payload_bytes=payloads.get(c))
-            times[c] = t
-            comm += nbytes
-            self.scheduler.observe(c, splits[c], t)
+            self.scheduler.observe(c, splits[c], times[c])
 
-        items = {key: max(times[c] for c in members)
+        items = {key: max(commits[c] for c in members)
                  for key, members in groups.items() if members}
         committed, staleness, new_clock = self._close_window(items, clock0)
+        self._drain_downloads(new_clock)
 
         self.clock = new_clock
         self.comm += comm
@@ -305,9 +441,65 @@ class RoundDriver:
             round=self.round, clock=self.clock,
             round_time=new_clock - clock0, comm_bytes=comm, splits=splits,
             times=times, committed=tuple(committed), staleness=staleness,
-            pending=len(self._pending))
+            pending=len(self._pending), phases=phases,
+            downloads=len(self._downloads))
         self.round += 1
         return rec
+
+    # --------------------------------------------------- phase pipeline
+    def _phase_schedule(self, part, splits, payloads, pay_up, pay_down,
+                        clock0):
+        """Chain upload → server-compute → download events per device.
+        Returns ({cid: commit time}, {cid: full round duration},
+        round wire bytes, {cid: phase durations}).
+
+        Commit = end of the device's server-compute share (its own
+        Eq.-1 Fs term chained on its own upload — the server starts
+        folding a member's contribution in as soon as it arrives, which
+        is exactly the upload/backward overlap the pipeline buys).
+        Downloads drain in the background: they gate ``flush()`` and the
+        honest final wall-clock, not the aggregation windows."""
+        quants = {}
+        for c in part:
+            dev = self._dev_by_id.get(c, c)
+            quants[c] = self.cost.phase_cost(
+                dev, splits[c], clock0, up_payload=pay_up.get(c),
+                down_payload=pay_down.get(c))
+
+        jobs, order = [], []
+        for c, pc in quants.items():
+            if pc is not None:
+                jobs.append((clock0 + pc.t_pre, pc.up_bytes, pc.up_rate))
+                order.append(c)
+        fins = shared_link_finish_times(jobs,
+                                        self.cost.shared_uplink_bytes())
+        up_end = dict(zip(order, fins))
+
+        commits, times, phases, comm = {}, {}, {}, 0.0
+        for c, pc in quants.items():
+            if pc is None:             # no decomposition: atomic event
+                dev = self._dev_by_id.get(c, c)
+                t, nbytes = self.cost.time_and_bytes(
+                    dev, splits[c], clock0,
+                    payload_bytes=payloads.get(c))
+                commits[c] = clock0 + t
+                times[c] = t
+                comm += nbytes
+                continue
+            commit = up_end[c] + pc.t_srv
+            dl_end = commit + pc.t_down
+            commits[c] = commit
+            times[c] = dl_end - clock0
+            comm += pc.total_bytes
+            phases[c] = {"up": up_end[c] - clock0, "srv": pc.t_srv,
+                         "down": pc.t_down}
+            heapq.heappush(self._downloads, (dl_end, self._seq, c))
+            self._seq += 1
+        return commits, times, comm, phases
+
+    def _drain_downloads(self, horizon):
+        while self._downloads and self._downloads[0][0] <= horizon:
+            heapq.heappop(self._downloads)
 
     # ------------------------------------------------------ event window
     def _push(self, key, ready):
@@ -322,17 +514,17 @@ class RoundDriver:
         return out
 
     def _close_window(self, items: dict, now: float):
-        """items: {key: duration}. Returns (committed keys, staleness
-        per key in rounds, new clock)."""
-        for key, dur in items.items():
-            self._push(key, now + dur)
+        """items: {key: absolute commit-ready time}. Returns (committed
+        keys, staleness per key in rounds, new clock)."""
+        for key, ready in items.items():
+            self._push(key, ready)
         if self.mode == "sync" or self.staleness_cap == 0:
             # barrier: everything dispatched must land this round
             new_clock = max((e.ready for e in self._pending), default=now)
         elif not self._pending:
             return [], {}, now
         else:
-            fresh = sorted(now + d for d in items.values())
+            fresh = sorted(items.values())
             q = max(1, math.ceil(self.quorum * len(fresh))) if fresh else 0
             t_quorum = fresh[q - 1] if fresh else now
             # any event that would exceed the staleness cap by waiting
@@ -349,12 +541,16 @@ class RoundDriver:
 
     def flush(self):
         """Wait out every in-flight event (end of training): advances the
-        clock to the last pending completion and commits everything.
-        Returns (committed keys, staleness dict)."""
-        if not self._pending:
+        clock past the last pending commit AND the last draining
+        download, commits everything. Returns (committed keys, staleness
+        dict)."""
+        ready = [e.ready for e in self._pending] \
+            + [r for r, _, _ in self._downloads]
+        if not ready:
             return [], {}
-        new_clock = max(e.ready for e in self._pending)
+        new_clock = max(ready)
         done = self._pop_ready(new_clock)
+        self._drain_downloads(new_clock)
         self.clock = max(self.clock, new_clock)
         return [e.key for e in done], \
             {e.key: self.round - 1 - e.round for e in done}

@@ -114,7 +114,7 @@ class S2FLEngine:
         self.driver = RoundDriver(
             self.scheduler, cost, self.devices, mode=dcfg.exec_mode,
             staleness_cap=dcfg.staleness_cap, quorum=dcfg.quorum,
-            predictive=dcfg.predictive,
+            predictive=dcfg.predictive, pipeline=dcfg.pipeline,
             warmup_devices=[d for d in self.devices if d.cid in data])
         self._held = {}            # gid -> un-committed round results
         self._next_gid = 0
@@ -278,9 +278,17 @@ class S2FLEngine:
                                       data_size=self._data_size(c),
                                       group=gid) for c in group]
                 self._held[gid] = (states, server_copies[gi])
+            # per-direction byte split: the pipelined timeline prices the
+            # metered uplink (features) and downlink (dfx) separately
+            per_dir = {c: self.channel.round_payload_split(c)
+                       for c in participants}
             return {"groups": keyed,
                     "payload_bytes": {c: self.channel.round_payload(c)
-                                      for c in participants}}
+                                      for c in participants},
+                    "payload_up_bytes": {c: per_dir[c][0]
+                                         for c in participants},
+                    "payload_down_bytes": {c: per_dir[c][1]
+                                           for c in participants}}
 
         rec = self.driver.run_round(participants, execute=execute)
         self._commit(rec.committed)
@@ -354,11 +362,21 @@ class S2FLEngine:
             self.params = aggregate(self.model, states, copies)
 
     def _record(self, loss, rec):
-        self.history.append({"round": len(self.history),
-                             "clock": self.clock, "comm": self.comm,
-                             "loss": loss,
-                             "committed": len(rec.committed),
-                             "pending": rec.pending})
+        entry = {"round": len(self.history),
+                 "clock": self.clock, "comm": self.comm,
+                 "comm_up": self.channel.up_bytes,
+                 "comm_down": self.channel.down_bytes,
+                 "loss": loss,
+                 "committed": len(rec.committed),
+                 "pending": rec.pending}
+        if rec.phases:
+            # the window's critical-path phase split (max over devices)
+            entry.update(
+                t_upload=max(p["up"] for p in rec.phases.values()),
+                t_server=max(p["srv"] for p in rec.phases.values()),
+                t_download=max(p["down"] for p in rec.phases.values()),
+                downloads_in_flight=rec.downloads)
+        self.history.append(entry)
         return self.history[-1]
 
     def _seq_len(self):
@@ -393,13 +411,14 @@ class S2FLEngine:
                 rec.update(self.evaluate(eval_data))
             if verbose:
                 print(rec)
-        # semi_async: wait out and aggregate any still-in-flight
+        # semi_async/pipeline: wait out and aggregate any still-in-flight
         # stragglers so no trained update is dropped at shutdown, and
-        # fold the flush tail into the final record so
-        # history[-1]['clock'] is the true total wall-clock
+        # fold the flush tail (late commits AND draining downloads) into
+        # the final record so history[-1]['clock'] is the true total
+        # wall-clock even when the flush only waited for downloads
         committed, _ = self.driver.flush()
         self._commit(committed)
-        if committed and self.history:
+        if self.history:
             self.history[-1]["clock"] = self.clock
             self.history[-1]["committed"] += len(committed)
             self.history[-1]["pending"] = 0

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import warnings
 
 import numpy as np
 
@@ -28,6 +27,12 @@ SERVER_RATE = 1e7
 # repro.comm byte convention: rates stay in Table-1 elements/s; byte
 # accounting treats one fp32 element as 4 bytes (comm/README.md).
 BYTES_PER_ELEM = 4.0
+
+# Phase split of the client fwd+bwd FLOPs Fc: the forward pass (before
+# the feature upload) is ~1/3, the backward (after the gradient
+# download) ~2/3 — the standard bwd ≈ 2x fwd accounting that
+# utils/flops.py already uses for Fc itself.
+CLIENT_FWD_FRAC = 1.0 / 3.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,29 +70,6 @@ class RoundCost:
     device_times: dict = dataclasses.field(default_factory=dict)
 
 
-_LEGACY_MSG = ("element-based Eq.-1 helper {} is deprecated: drive rounds "
-               "through repro.core.driver.RoundDriver with an AnalyticCost "
-               "(CommChannel byte path) instead")
-
-
-def device_round_time(dev: Device, *, wc_size: float, feat_size: float,
-                      p: int, fc: float, fs: float) -> float:
-    """DEPRECATED (element-based). Eq. 1. wc_size: |Wc| elements;
-    feat_size: q per-sample elements. Use the channel byte path
-    (``CommChannel.analytic_round_time`` via ``driver.AnalyticCost``)."""
-    warnings.warn(_LEGACY_MSG.format("device_round_time"),
-                  DeprecationWarning, stacklevel=2)
-    comm = (2.0 * wc_size + 2.0 * p * feat_size) / dev.rate
-    return comm + fc / dev.comp + fs / SERVER_FLOPS
-
-
-def device_round_comm(*, wc_size: float, feat_size: float, p: int) -> float:
-    """DEPRECATED (element-based) — see ``device_round_time``."""
-    warnings.warn(_LEGACY_MSG.format("device_round_comm"),
-                  DeprecationWarning, stacklevel=2)
-    return 2.0 * wc_size + 2.0 * p * feat_size
-
-
 def device_round_time_bytes(dev: Device, *, comm_bytes: float, fc: float,
                             fs: float, rate: float = None) -> float:
     """Eq. 1 with channel-metered payloads: comm_bytes is the full wire
@@ -108,13 +90,6 @@ def fedavg_round_time(dev: Device, *, w_size: float, p: int,
                       f_full: float) -> float:
     """FedAvg baseline: full model both ways, all compute on device."""
     return 2.0 * w_size / dev.rate + p * f_full / dev.comp
-
-
-def fedavg_round_comm(*, w_size: float) -> float:
-    """DEPRECATED (element-based) — use ``fedavg_round_comm_bytes``."""
-    warnings.warn(_LEGACY_MSG.format("fedavg_round_comm"),
-                  DeprecationWarning, stacklevel=2)
-    return 2.0 * w_size
 
 
 def fedavg_round_comm_bytes(*, w_size: float) -> float:

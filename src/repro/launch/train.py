@@ -71,6 +71,13 @@ def main(argv=None):
                     help="downlink dfx codec (default: same as --codec)")
     ap.add_argument("--link-trace", default="",
                     help="JSON LinkTrace file (default: static Table-1)")
+    ap.add_argument("--latency", type=float, default=0.0,
+                    help="per-message link latency in seconds (four "
+                         "messages per device-round)")
+    ap.add_argument("--contention", type=float, default=0.0,
+                    help="shared Main-Server uplink capacity in Table-1 "
+                         "elements/s (0 = uncontended); concurrent "
+                         "uploads contend for it under --pipeline")
     # round loop (repro.core.driver)
     ap.add_argument("--exec-mode", default="sync",
                     choices=["sync", "semi_async"],
@@ -85,6 +92,10 @@ def main(argv=None):
     ap.add_argument("--predictive", action="store_true",
                     help="sliding scheduler forecasts the link rate at "
                          "the projected completion time")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="phase-level event pipeline: upload / server "
+                         "compute / download phases overlap across "
+                         "devices and groups")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -98,10 +109,12 @@ def main(argv=None):
 
     ccfg = CommConfig(codec=args.codec, grad_codec=args.grad_codec,
                       link="trace" if args.link_trace else "static",
-                      trace_file=args.link_trace)
+                      trace_file=args.link_trace, latency=args.latency,
+                      uplink_capacity=args.contention)
     dcfg = DriverConfig(exec_mode=args.exec_mode,
                         staleness_cap=args.staleness_cap,
-                        quorum=args.quorum, predictive=args.predictive)
+                        quorum=args.quorum, predictive=args.predictive,
+                        pipeline=args.pipeline)
     ecfg = EngineConfig(
         mode=args.mode, rounds=args.rounds,
         clients_per_round=args.per_round, batch_size=args.batch_size,

@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.comm import AUX_BYTES, CommChannel, LinkTrace, StaticLink, \
-    get_codec, list_codecs
+    get_codec, list_codecs, shared_link_finish_times
 from repro.configs import CommConfig, get_config
 from repro.core.simulation import make_device_grid
 from repro.kernels.int8_quant.kernel import (int8_dequantize_pallas,
@@ -142,6 +142,67 @@ def test_channel_meters_directions_and_rounds():
 def test_channel_default_grad_codec_follows_feature_codec():
     ch = CommChannel(codec="bf16")
     assert ch.grad_codec.name == "bf16"
+
+
+def test_channel_per_direction_round_split():
+    """The phase pipeline prices uplink (features) and downlink (dfx)
+    separately; the split must sum to the combined round payload."""
+    ch = CommChannel(codec="int8", grad_codec="fp32")
+    h = jax.random.normal(KEY, (4, 256))
+    ch.uplink_features(3, h)
+    ch.downlink_grads(3, h)
+    up, down = ch.round_payload_split(3)
+    assert up == pytest.approx(4 * 256 * 1.0 + 4 * 8.0)
+    assert down == pytest.approx(4 * 256 * 4.0)
+    assert up + down == pytest.approx(ch.round_payload(3))
+    assert ch.round_payload_split(99) == (0.0, 0.0)
+    # the analytic per-direction estimates follow the same codecs
+    n = 4 * 256
+    assert ch.estimate_uplink_payload(n) + ch.estimate_downlink_payload(n) \
+        == pytest.approx(ch.estimate_round_payload(n))
+    assert ch.estimate_uplink_payload(n) < ch.estimate_downlink_payload(n)
+
+
+def test_channel_validates_delay_knobs():
+    with pytest.raises(ValueError):
+        CommChannel(latency=-0.1)
+    with pytest.raises(ValueError):
+        CommChannel(uplink_capacity=-1.0)
+    ch = CommChannel(latency=0.5, uplink_capacity=1e6)
+    assert ch.latency == 0.5 and ch.uplink_capacity == 1e6
+
+
+# ---------------------------------------------------------------------------
+# shared-uplink contention (fluid max-min fair schedule)
+# ---------------------------------------------------------------------------
+def test_shared_link_known_answers():
+    # two equal jobs split the capacity: both take twice as long
+    assert shared_link_finish_times(
+        [(0.0, 100.0, 10.0), (0.0, 100.0, 10.0)], 10.0) \
+        == pytest.approx([20.0, 20.0])
+    # staggered arrivals: the first finishes alone, the second after it
+    assert shared_link_finish_times(
+        [(0.0, 100.0, 10.0), (10.0, 50.0, 10.0)], 10.0) \
+        == pytest.approx([10.0, 15.0])
+    # a slow device never blocks the fast one from the leftover capacity
+    assert shared_link_finish_times(
+        [(0.0, 100.0, 2.0), (0.0, 100.0, 100.0)], 10.0) \
+        == pytest.approx([50.0, 12.5])
+    # uncontended degenerates to arrival + size/rate; zero-size lands
+    # on arrival
+    assert shared_link_finish_times(
+        [(1.0, 30.0, 10.0), (5.0, 0.0, 10.0)]) \
+        == pytest.approx([4.0, 5.0])
+    # a finisher frees its share mid-flight for the survivor
+    fins = shared_link_finish_times(
+        [(0.0, 50.0, 10.0), (0.0, 100.0, 10.0)], 10.0)
+    # both at 5 B/s until t=10 (job0 done); job1 has 50 B left at 10 B/s
+    assert fins == pytest.approx([10.0, 15.0])
+    assert shared_link_finish_times([], 10.0) == []
+    with pytest.raises(ValueError):
+        shared_link_finish_times([(0.0, 1.0, 1.0)], 0.0)
+    with pytest.raises(ValueError):
+        shared_link_finish_times([(0.0, 1.0, 0.0)], 10.0)
 
 
 # ---------------------------------------------------------------------------

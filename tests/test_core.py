@@ -11,8 +11,8 @@ from repro.core.balance import (balance_permutation, eq2_distance,
                                 exhaustive_groups, greedy_groups,
                                 group_distance, label_histogram)
 from repro.core.scheduler import FixedSplitScheduler, SlidingSplitScheduler
-from repro.core.simulation import (Device, device_round_time,
-                                   fedavg_round_time, make_device_grid)
+from repro.core.simulation import (Device, fedavg_round_time,
+                                   make_device_grid)
 from repro.core.split import SplitPlan, default_plan
 from repro.configs import get_config, make_reduced
 from repro.models import SplitModel
@@ -157,10 +157,10 @@ def test_eq1_straggler_vs_fast_device():
     t_slow_small = t_of(slow, wc_size=1e5, feat_size=1e4, p=32,
                         fc=1e9, fs=1.9e10)
     assert t_slow_small < t_slow
-    # the element-based seed helper agrees (and is formally deprecated)
-    with pytest.warns(DeprecationWarning):
-        legacy = device_round_time(slow, wc_size=1e6, feat_size=1e4, p=32,
-                                   fc=1e10, fs=1e10)
+    # the byte path reproduces the seed's element-based Eq.-1 numbers
+    # (the deprecated element helpers are gone; this inlines their math)
+    legacy = (2.0 * 1e6 + 2.0 * 32 * 1e4) / slow.rate \
+        + 1e10 / slow.comp + 1e10 / 5e10
     assert legacy == pytest.approx(t_slow)
 
 

@@ -1,11 +1,15 @@
 """RoundDriver — the single round-loop implementation (core/driver.py).
 
 Covers: golden equivalence with the pre-refactor inline loop (fixed
-seed, fp32/static, sync), the semi_async event-queue clock bounds
+seed, fp32/static, sync — the bit-exactness contract the phase-split
+refactor must preserve), the semi_async event-queue clock bounds
 (wall-clock <= sync on the static Table-1 grid; staleness never exceeds
-the cap; cap=0 degenerates to sync), the predictive (link-forecasting)
-split selection, cost-model plumbing, and the engine running a full
-semi_async training round for real."""
+the cap; cap=0 degenerates to sync), the phase pipeline (golden clock,
+pipelined <= phase-sequential <= sync ordering, phase bookkeeping,
+contention/latency pricing, sync pipelined training equivalence), the
+predictive (link-forecasting) split selection, cost-model plumbing, and
+the engine running full semi_async / pipelined training rounds for
+real."""
 import numpy as np
 import pytest
 
@@ -31,16 +35,22 @@ P = 64
 GOLDEN_CLOCK = 149.97601899999998
 GOLDEN_COMM = 423424400.0
 GOLDEN_LAST_SEL = {2: 4, 3: 2, 4: 2, 7: 2, 11: 1}
+# Same setup through the phase pipeline (semi_async, cap=1, quorum=0.5),
+# after flush() drains the straggler tail and the last downloads. Same
+# wire bytes; the clock is the pipelined event timeline.
+GOLDEN_PIPE_CLOCK = 64.95280709999999
 
 
 def _drive(mode="sync", rounds=10, link=None, staleness_cap=1,
-           quorum=0.5, seed=0, n_devices=12, per_round=5):
+           quorum=0.5, seed=0, n_devices=12, per_round=5,
+           pipeline=False, latency=0.0, uplink_capacity=0.0):
     devices = make_device_grid(n_devices, seed=seed)
-    ch = CommChannel(codec="fp32", link=link or StaticLink())
+    ch = CommChannel(codec="fp32", link=link or StaticLink(),
+                     latency=latency, uplink_capacity=uplink_capacity)
     drv = RoundDriver(SlidingSplitScheduler(PLAN),
                       AnalyticCost(ch, COSTS, p=P), devices,
                       mode=mode, staleness_cap=staleness_cap,
-                      quorum=quorum)
+                      quorum=quorum, pipeline=pipeline)
     rng = np.random.default_rng(seed)
     recs = []
     for r in range(rounds):
@@ -128,6 +138,101 @@ def test_empty_round_is_a_noop_on_the_clock():
     rec = drv.run_round([])
     assert drv.clock == clock and drv.comm == comm
     assert rec.round_time == 0.0 and rec.committed == ()
+
+
+# ---------------------------------------------------------------------------
+# phase pipeline (upload / server compute / download)
+# ---------------------------------------------------------------------------
+def test_pipeline_golden_clock_and_same_wire_bytes():
+    """The pipelined event timeline on the golden setup: deterministic
+    clock, identical wire traffic (phases re-slice the round, they never
+    change what crosses the wire)."""
+    drv, recs = _drive(mode="semi_async", pipeline=True)
+    drv.flush()
+    assert drv.clock == pytest.approx(GOLDEN_PIPE_CLOCK, rel=1e-12)
+    assert drv.comm == pytest.approx(GOLDEN_COMM, rel=1e-12)
+    assert any(r.phases for r in recs)
+
+
+def test_pipelined_le_sequential_le_sync():
+    """Commits move to the end of server compute, so after flushing the
+    download tail the pipelined wall-clock is a lower bound on the
+    phase-sequential one, which lower-bounds sync (static link)."""
+    sync, _ = _drive(mode="sync")
+    seq, _ = _drive(mode="semi_async")
+    pipe, _ = _drive(mode="semi_async", pipeline=True)
+    seq.flush(), pipe.flush()
+    assert pipe.clock < seq.clock       # overlap really bought time
+    assert seq.clock <= sync.clock + 1e-9
+    assert pipe.comm == pytest.approx(sync.comm)
+
+
+def test_pipeline_phase_bookkeeping():
+    """Per-device phase durations are positive, chain to the device's
+    full Eq.-1 round time (uncontended), and the download heap drains
+    by flush()."""
+    drv, recs = _drive(mode="semi_async", pipeline=True)
+    assert any(r.downloads > 0 for r in recs)   # downloads really drain
+    for r in recs:                              # in the background
+        for c, ph in r.phases.items():
+            assert ph["up"] > 0 and ph["srv"] > 0 and ph["down"] > 0
+            assert ph["up"] + ph["srv"] + ph["down"] \
+                == pytest.approx(r.times[c])
+    drv.flush()
+    assert not drv._downloads and not drv._pending
+
+
+def test_pipeline_sync_barrier_still_commits_everything():
+    drv, recs = _drive(mode="sync", pipeline=True)
+    assert all(set(r.committed) == set(r.splits) for r in recs)
+    assert all(v == 0 for r in recs for v in r.staleness.values())
+
+
+def test_pipeline_contention_and_latency_price_the_clock():
+    """A finite shared ingress stretches overlapping uploads; a
+    per-message latency adds 4 * latency to every device-round in BOTH
+    the atomic and the phase paths (consistent pricing)."""
+    free, _ = _drive(mode="semi_async", pipeline=True)
+    free.flush()
+    jam, _ = _drive(mode="semi_async", pipeline=True,
+                    uplink_capacity=2e6)
+    jam.flush()
+    assert jam.clock > free.clock       # uploads really contended
+    assert jam.comm == pytest.approx(free.comm)
+
+    devices = make_device_grid(3, seed=0)
+    lat = 0.25
+    ch0 = CommChannel(codec="fp32")
+    ch1 = CommChannel(codec="fp32", latency=lat)
+    c0 = AnalyticCost(ch0, COSTS, p=P)
+    c1 = AnalyticCost(ch1, COSTS, p=P)
+    t0, _ = c0.time_and_bytes(devices[0], 2, 0.0)
+    t1, _ = c1.time_and_bytes(devices[0], 2, 0.0)
+    assert t1 == pytest.approx(t0 + 4 * lat)
+    p0 = c0.phase_cost(devices[0], 2, 0.0)
+    p1 = c1.phase_cost(devices[0], 2, 0.0)
+    chained0 = p0.t_pre + p0.up_bytes / p0.up_rate + p0.t_srv + p0.t_down
+    chained1 = p1.t_pre + p1.up_bytes / p1.up_rate + p1.t_srv + p1.t_down
+    assert chained0 == pytest.approx(t0)        # phases re-slice Eq. 1
+    assert chained1 == pytest.approx(t1)
+    assert p0.total_bytes == pytest.approx(
+        c0.time_and_bytes(devices[0], 2, 0.0)[1])
+
+
+def test_forecast_sees_contention_adjusted_rate():
+    """With a bounded shared ingress the predictive forecast prices the
+    round with min(link rate, capacity / cohort size) — a fuller round
+    forecasts slower."""
+    devices = make_device_grid(3, seed=0)
+    cost = AnalyticCost(CommChannel(codec="fp32", uplink_capacity=1e6),
+                        COSTS, p=P)
+    alone = cost.forecast_time(devices[0], 2, 0.0, 10.0, load=1)
+    crowded = cost.forecast_time(devices[0], 2, 0.0, 10.0, load=8)
+    assert crowded > alone
+    # uncontended channel: load changes nothing
+    cost0 = AnalyticCost(CommChannel(codec="fp32"), COSTS, p=P)
+    assert cost0.forecast_time(devices[0], 2, 0.0, 10.0, load=8) \
+        == pytest.approx(cost0.forecast_time(devices[0], 2, 0.0, 10.0))
 
 
 # ---------------------------------------------------------------------------
@@ -229,3 +334,58 @@ def test_engine_semi_async_trains_and_overlaps():
     assert all(np.isfinite(h["loss"]) for h in semi.history)
     # same wire traffic either way — only the clock semantics differ
     assert semi.comm == pytest.approx(sync.comm)
+
+
+def test_engine_sync_pipeline_is_a_timing_only_change():
+    """Golden regression for the phase split: exec_mode=sync on
+    fp32/static trains to the SAME parameters with the pipeline on or
+    off (phases re-slice the simulated clock; the training data flow —
+    sampling, grouping, codec round-trips, aggregation — is untouched),
+    with identical wire bytes and a clock that overlap can only
+    shrink."""
+    import jax
+
+    from repro.configs import DriverConfig
+
+    sync = _make_engine(DriverConfig())
+    sync.run(rounds=4)
+    pipe = _make_engine(DriverConfig(pipeline=True))
+    pipe.run(rounds=4)
+    assert pipe.comm == pytest.approx(sync.comm)
+    assert pipe.clock <= sync.clock + 1e-9
+    for a, b in zip(jax.tree.leaves(sync.params),
+                    jax.tree.leaves(pipe.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64), rtol=1e-6)
+    # per-round losses identical too (same batches, same updates)
+    assert [h["loss"] for h in sync.history] \
+        == pytest.approx([h["loss"] for h in pipe.history])
+    # the pipelined history carries the per-phase time split
+    assert all({"t_upload", "t_server", "t_download"} <= set(h)
+               for h in pipe.history)
+    # the flush tail (download-only in sync mode: every commit already
+    # landed in-window) is folded into the final record, so the history
+    # agrees with the driver about the true total wall-clock
+    assert pipe.history[-1]["clock"] == pipe.clock
+    assert pipe.history[-1]["pending"] == 0
+
+
+def test_engine_pipelined_semi_async_trains_for_real():
+    from repro.configs import DriverConfig
+
+    seq = _make_engine(DriverConfig(exec_mode="semi_async",
+                                    staleness_cap=2, quorum=0.5))
+    seq.run(rounds=4)
+    pipe = _make_engine(DriverConfig(exec_mode="semi_async",
+                                     staleness_cap=2, quorum=0.5,
+                                     pipeline=True))
+    pipe.run(rounds=4)
+    # phase overlap can only help the clock further (static link)
+    assert pipe.clock <= seq.clock + 1e-9
+    assert not pipe._held                  # nothing dropped at shutdown
+    assert all(np.isfinite(h["loss"]) for h in pipe.history)
+    assert pipe.comm == pytest.approx(seq.comm)
+    # per-direction byte accounting rides along in the history
+    last = pipe.history[-1]
+    assert last["comm_up"] > 0 and last["comm_down"] > 0
+    assert last["comm_up"] + last["comm_down"] < last["comm"]

@@ -1,0 +1,186 @@
+"""Property-based harness for the RoundDriver event pipeline.
+
+Hypothesis (via tests/hypothesis_compat.py — skipped, not failed, when
+the package is absent) drives random arrival regimes, quorums, staleness
+caps, cost structures, latencies and contention capacities through the
+three timelines (sync barrier, phase-sequential semi_async, phase
+pipeline) and asserts the invariants the driver's design note promises:
+
+  * the clock is monotone and every round advance is non-negative;
+  * no work item is ever dropped — everything dispatched commits either
+    in a window or at ``flush()``, exactly once;
+  * staleness never exceeds the cap in any window;
+  * with contention and latency off:
+        pipelined wall-clock <= phase-sequential <= sync
+    (commits can only move earlier when a group commits at the end of
+    its server compute instead of the end of its download);
+  * a finite shared ingress can only slow the pipelined clock, and the
+    fluid max-min fair upload schedule respects per-job lower bounds.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.comm import CommChannel, shared_link_finish_times
+from repro.core.driver import AnalyticCost, RoundDriver
+from repro.core.scheduler import FixedSplitScheduler, SlidingSplitScheduler
+from repro.core.simulation import make_device_grid
+from repro.core.split import SplitPlan
+
+PLAN = SplitPlan(n_units=8, split_points=(1, 2, 4))
+
+
+def _rand_costs(rng):
+    """Random-but-plausible per-split Eq.-1 quantities (positive, spread
+    over the regimes where stragglers and ties both occur)."""
+    out = {}
+    for s in PLAN.split_points:
+        out[s] = dict(wc_size=float(rng.uniform(1e4, 2e6)),
+                      feat_size=float(rng.uniform(1e2, 2e4)),
+                      fc=float(rng.uniform(1e7, 3e9)),
+                      fs=float(rng.uniform(1e7, 3e9)))
+    return out
+
+
+def _drive(costs, *, n_devices, rounds, per_round, quorum, cap, seed,
+           mode="semi_async", pipeline=False, latency=0.0,
+           uplink_capacity=0.0, scheduler=SlidingSplitScheduler):
+    devices = make_device_grid(n_devices, seed=seed)
+    ch = CommChannel(codec="fp32", latency=latency,
+                     uplink_capacity=uplink_capacity)
+    drv = RoundDriver(scheduler(PLAN), AnalyticCost(ch, costs, p=32),
+                      devices, mode=mode, staleness_cap=cap,
+                      quorum=quorum, pipeline=pipeline)
+    rng = np.random.default_rng(seed)
+    recs = []
+    for r in range(rounds):
+        part = rng.choice(devices, size=per_round, replace=False)
+        recs.append(drv.run_round(part))
+    flushed, _ = drv.flush()
+    return drv, recs, flushed
+
+
+DRIVER_ARGS = dict(
+    seed=st.integers(0, 2**31 - 1),
+    n_devices=st.integers(2, 9),
+    rounds=st.integers(1, 7),
+    quorum=st.floats(0.1, 1.0),
+    cap=st.integers(0, 3),
+)
+
+
+@given(**DRIVER_ARGS)
+@settings(max_examples=40, deadline=None)
+def test_clock_monotone_and_no_dropped_work(seed, n_devices, rounds,
+                                            quorum, cap):
+    rng = np.random.default_rng(seed)
+    costs = _rand_costs(rng)
+    per_round = int(rng.integers(1, n_devices + 1))
+    for pipeline in (False, True):
+        drv, recs, flushed = _drive(
+            costs, n_devices=n_devices, rounds=rounds,
+            per_round=per_round, quorum=quorum, cap=cap, seed=seed,
+            pipeline=pipeline)
+        # monotone timeline
+        clocks = [0.0] + [r.clock for r in recs] + [drv.clock]
+        assert all(b >= a for a, b in zip(clocks, clocks[1:]))
+        assert all(r.round_time >= 0.0 for r in recs)
+        # zero dropped work: every dispatched item commits exactly once
+        committed = [k for r in recs for k in r.committed] + list(flushed)
+        assert sorted(committed) == sorted(
+            c for r in recs for c in r.splits)
+        assert not drv._pending and not drv._downloads
+        # staleness bounded in every window
+        for r in recs:
+            assert all(v <= cap for v in r.staleness.values()), r
+
+
+@given(**DRIVER_ARGS)
+@settings(max_examples=40, deadline=None)
+def test_pipelined_le_sequential_le_sync(seed, n_devices, rounds, quorum,
+                                         cap):
+    """With contention and latency off every commit can only move
+    earlier under phase overlap, so the three flushed wall-clocks are
+    totally ordered (static link; the same wire bytes cross either
+    way)."""
+    rng = np.random.default_rng(seed)
+    costs = _rand_costs(rng)
+    per_round = int(rng.integers(1, n_devices + 1))
+    kw = dict(n_devices=n_devices, rounds=rounds, per_round=per_round,
+              quorum=quorum, cap=cap, seed=seed)
+    sync, _, _ = _drive(costs, mode="sync", **kw)
+    seq, _, _ = _drive(costs, mode="semi_async", **kw)
+    pipe, _, _ = _drive(costs, mode="semi_async", pipeline=True, **kw)
+    tol = 1e-9 * max(sync.clock, 1.0)
+    assert pipe.clock <= seq.clock + tol
+    assert seq.clock <= sync.clock + tol
+    assert pipe.comm == pytest.approx(seq.comm) == pytest.approx(sync.comm)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       n_devices=st.integers(2, 8),
+       rounds=st.integers(1, 6),
+       capacity=st.floats(1e5, 1e7))
+@settings(max_examples=30, deadline=None)
+def test_contention_only_slows_the_pipeline(seed, n_devices, rounds,
+                                            capacity):
+    """A finite shared ingress stretches concurrent uploads, so the
+    pipelined clock with contention is >= the uncontended one. Fixed
+    splits keep the two runs' schedules identical, isolating the
+    contention effect from the scheduler's reaction to it."""
+    rng = np.random.default_rng(seed)
+    costs = _rand_costs(rng)
+    kw = dict(n_devices=n_devices, rounds=rounds, per_round=n_devices,
+              quorum=1.0, cap=1, seed=seed, pipeline=True,
+              scheduler=FixedSplitScheduler)
+    free, _, _ = _drive(costs, **kw)
+    jam, _, _ = _drive(costs, uplink_capacity=capacity, **kw)
+    assert jam.clock >= free.clock - 1e-9 * max(free.clock, 1.0)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       latency=st.floats(0.001, 0.5))
+@settings(max_examples=20, deadline=None)
+def test_latency_priced_consistently_across_modes(seed, latency):
+    """Four messages per device-round: the atomic Eq.-1 path and the
+    phase decomposition (2 on upload + 2 on download) must charge the
+    same total, so latency shifts both clocks without breaking the
+    pipelined <= sequential ordering."""
+    rng = np.random.default_rng(seed)
+    costs = _rand_costs(rng)
+    kw = dict(n_devices=5, rounds=4, per_round=3, quorum=0.5, cap=1,
+              seed=seed, latency=latency)
+    seq, _, _ = _drive(costs, mode="semi_async", **kw)
+    pipe, _, _ = _drive(costs, mode="semi_async", pipeline=True, **kw)
+    base_seq, _, _ = _drive(costs, mode="semi_async",
+                            **{**kw, "latency": 0.0})
+    assert pipe.clock <= seq.clock + 1e-9 * max(seq.clock, 1.0)
+    assert seq.clock >= base_seq.clock    # latency can only add time
+
+
+# ---------------------------------------------------------------------------
+# the fluid max-min fair shared-link schedule
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 2**31 - 1),
+       n_jobs=st.integers(1, 12),
+       capacity=st.floats(10.0, 1e4))
+@settings(max_examples=50, deadline=None)
+def test_shared_link_schedule_invariants(seed, n_jobs, capacity):
+    rng = np.random.default_rng(seed)
+    jobs = [(float(rng.uniform(0, 50)), float(rng.uniform(0, 1e4)),
+             float(rng.uniform(1.0, 1e3))) for _ in range(n_jobs)]
+    fins = shared_link_finish_times(jobs, capacity)
+    for (a, b, r), f in zip(jobs, fins):
+        # never faster than the job's best case on the contended link
+        best = a + b / min(r, capacity)
+        assert f >= best - 1e-6 * max(best, 1.0)
+    # uncontended: exactly arrival + size/rate
+    free = shared_link_finish_times(jobs, math.inf)
+    for (a, b, r), f in zip(jobs, free):
+        assert f == pytest.approx(a + b / r)
+    # more capacity never finishes later
+    wider = shared_link_finish_times(jobs, capacity * 2.0)
+    for f2, f1 in zip(wider, fins):
+        assert f2 <= f1 + 1e-6 * max(f1, 1.0)
