@@ -6,7 +6,14 @@ CPU-scale reduction (documented in EXPERIMENTS.md): ResNet8 on synthetic
 the ORDERING S²FL >= SFL ≈ FedAvg (paper: +16.5% max gain, S²FL best in
 all 39 rows of Table 2), not absolute accuracies.
 
+Also (`frontier`): the codec x error-feedback accuracy-vs-bytes
+frontier — the same S²FL run under each payload codec (fp32 / int8 /
+topk) with feedback off and on, reporting final test accuracy against
+the accumulated wire bytes, so a compression setting's accuracy cost is
+visible next to its bandwidth win.
+
 Env knobs: REPRO_BENCH_ROUNDS (default 20), REPRO_BENCH_CLIENTS (20).
+``--quick`` shrinks everything to a CI smoke.
 """
 from __future__ import annotations
 
@@ -14,6 +21,7 @@ import os
 
 from benchmarks.common import Timer, emit
 from repro.configs import get_config
+from repro.configs.base import CommConfig
 from repro.core.engine import EngineConfig, S2FLEngine
 from repro.data.partition import federate
 from repro.data.synthetic import make_image_dataset
@@ -23,26 +31,33 @@ ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", "20"))
 CLIENTS = int(os.environ.get("REPRO_BENCH_CLIENTS", "20"))
 
 
-def run_one(arch: str, alpha, mode: str, *, rounds=ROUNDS, seed=0):
-    ds = make_image_dataset(3000, seed=seed)
-    test = make_image_dataset(600, seed=seed + 77)
-    fed = federate(ds, CLIENTS, alpha=alpha, seed=seed)
+def run_one(arch: str, alpha, mode: str, *, rounds=ROUNDS,
+            clients=CLIENTS, n_train=3000, seed=0, comm=None):
+    ds = make_image_dataset(n_train, seed=seed)
+    test = make_image_dataset(max(200, n_train // 5), seed=seed + 77)
+    fed = federate(ds, clients, alpha=alpha, seed=seed)
     model = SplitModel(get_config(arch))
     ecfg = EngineConfig(mode=mode, rounds=rounds, clients_per_round=5,
-                        batch_size=32, group_size=2, lr=0.05, seed=seed)
+                        batch_size=32, group_size=2, lr=0.05, seed=seed,
+                        comm=comm or CommConfig())
     eng = S2FLEngine(model, fed, ecfg)
     eng.run()
-    return eng.evaluate(test)
+    res = eng.evaluate(test)
+    res["comm"] = eng.comm
+    res["clock"] = eng.clock
+    return res
 
 
-def run(archs=("resnet8",), alphas=(0.1, None)):
+def run(archs=("resnet8",), alphas=(0.1, None), *, rounds=ROUNDS,
+        clients=CLIENTS, n_train=3000):
     for arch in archs:
         for alpha in alphas:
             tag = f"a{alpha}" if alpha else "iid"
             accs = {}
             for mode in ("fedavg", "sfl", "s2fl"):
                 with Timer() as t:
-                    res = run_one(arch, alpha, mode)
+                    res = run_one(arch, alpha, mode, rounds=rounds,
+                                  clients=clients, n_train=n_train)
                 accs[mode] = res["acc"]
                 emit(f"table2.{arch}.{tag}.{mode}", t.us,
                      f"acc={res['acc']:.4f};loss={res['loss']:.4f}")
@@ -51,5 +66,47 @@ def run(archs=("resnet8",), alphas=(0.1, None)):
                  f"s2fl_minus_fedavg={accs['s2fl'] - accs['fedavg']:+.4f}")
 
 
+def frontier(arch: str = "resnet8", *, rounds=ROUNDS, clients=CLIENTS,
+             n_train=3000, alpha=0.3):
+    """codec x error-feedback accuracy-vs-bytes frontier on the S²FL
+    engine (real training: compression error flows through the loss).
+    Returns {(codec, ef): (acc, comm_bytes)}; asserts the byte ordering
+    topk < int8 < fp32 survives end-to-end metering."""
+    out = {}
+    for codec in ("fp32", "int8", "topk"):
+        for ef in ((False,) if codec == "fp32" else (False, True)):
+            comm = CommConfig(codec=codec, error_feedback=ef)
+            with Timer() as t:
+                res = run_one(arch, alpha, "s2fl", rounds=rounds,
+                              clients=clients, n_train=n_train,
+                              comm=comm)
+            out[(codec, ef)] = (res["acc"], res["comm"])
+            emit(f"frontier.{arch}.{codec}.{'ef' if ef else 'noef'}",
+                 t.us,
+                 f"acc={res['acc']:.4f};comm_bytes={res['comm']:.3e};"
+                 f"sim_time_s={res['clock']:.1f}")
+    assert out[("topk", False)][1] < out[("int8", False)][1] \
+        < out[("fp32", False)][1], out
+    return out
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    from benchmarks.common import write_json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny-scale smoke (CI): few rounds/clients, "
+                         "table2 on one alpha + the codec frontier")
+    ap.add_argument("--out", default="",
+                    help="dump the emitted rows as JSON (CI artifact)")
+    args = ap.parse_args()
+    if args.quick:
+        run(alphas=(0.3,), rounds=3, clients=6, n_train=600)
+        frontier(rounds=3, clients=6, n_train=600)
+    else:
+        run()
+        frontier()
+    if args.out:
+        write_json(args.out)

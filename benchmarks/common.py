@@ -1,12 +1,28 @@
 """Shared benchmark utilities: CSV emission per the harness contract
-(`name,us_per_call,derived` rows) + experiment helpers."""
+(`name,us_per_call,derived` rows) + experiment helpers.
+
+``emit`` also records every row in-process so a benchmark driver can
+dump the run as JSON (``write_json``) — CI uploads these as workflow
+artifacts, making perf-ordering regressions diffable per PR."""
 from __future__ import annotations
 
+import json
 import time
+
+ROWS: list = []          # every emit() of this process, in order
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.3f},{derived}")
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 3),
+                 "derived": derived})
+
+
+def write_json(path: str):
+    """Dump every row emitted so far to ``path`` (CI artifact)."""
+    with open(path, "w") as f:
+        json.dump(ROWS, f, indent=1)
+    print(f"# wrote {len(ROWS)} rows -> {path}")
 
 
 class Timer:

@@ -15,10 +15,18 @@ its server compute so uploads/backwards/downloads overlap across
 devices; a contended column prices the shared Main-Server ingress).
 
 Additionally (`sweep`): the repro.comm codec x link grid — for every
-payload codec (fp32 / bf16 / fp16 / int8) and link model (static Table-1
-vs trace-driven fading), the accumulated wire bytes and summed round
-time of an S²FL schedule, analytic Eq.-1 byte accounting as in
-comm/README.md."""
+payload codec (fp32 / bf16 / fp16 / int8 / topk / randk) and link model
+(static Table-1 vs trace-driven fading), the accumulated wire bytes and
+summed round time of an S²FL schedule, analytic Eq.-1 byte accounting
+as in comm/README.md.
+
+And (`ef_grid`): the codec x error-feedback grid on a METERED channel —
+real tensors cross the wire, so the encode/decode paths and the
+residual accumulators are exercised for real. Reports exact uplink
+bytes per codec (asserted: topk < int8 < fp32) and the cumulative-sum
+reconstruction error with feedback off vs on (feedback compensates
+dropped mass across rounds, so the cumulative error must shrink for the
+sparsifiers)."""
 from __future__ import annotations
 
 import numpy as np
@@ -114,7 +122,7 @@ def sweep(arch: str = "resnet8", *, rounds: int = 20):
                                   hi=1.0, seed=3),
     }
     base = None
-    for codec in ("fp32", "bf16", "fp16", "int8"):
+    for codec in ("fp32", "bf16", "fp16", "int8", "topk", "randk"):
         for lname, link in links.items():
             with Timer() as t:
                 clock, nbytes, _ = simulate_comm(arch, codec=codec,
@@ -126,10 +134,54 @@ def sweep(arch: str = "resnet8", *, rounds: int = 20):
                  f"bytes_vs_fp32={base / nbytes:.2f}x")
 
 
+def ef_grid(*, rounds: int = 16, shape=(16, 512), seed: int = 7):
+    """codec x error-feedback grid on a metered CommChannel: ``rounds``
+    feature tensors per cell cross the uplink for real. Columns: exact
+    uplink wire bytes (identical across the feedback axis — feedback
+    changes WHAT is sent, not how much) and the cumulative-sum
+    reconstruction error ||sum_t x_t - sum_t rx_t|| — the quantity the
+    error-feedback accumulators drive down (for lossless fp32 both
+    columns are ~0). Returns {(codec, ef): (bytes, cum_err)} and asserts
+    the acceptance ordering topk uplink bytes < int8 < fp32."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.comm import CommChannel
+
+    out = {}
+    for codec in ("fp32", "bf16", "fp16", "int8", "topk", "randk"):
+        for ef in (False, True):
+            ch = CommChannel(codec=codec, error_feedback=ef)
+            sent = np.zeros(shape)
+            got = np.zeros(shape)
+            with Timer() as t:
+                for r in range(rounds):
+                    x = jax.random.normal(jax.random.PRNGKey(
+                        seed * 1000 + r), shape, jnp.float32)
+                    rx = ch.uplink_features(0, x)
+                    sent += np.asarray(x, np.float64)
+                    got += np.asarray(rx, np.float64)
+            err = float(np.linalg.norm(sent - got))
+            out[(codec, ef)] = (ch.up_bytes, err)
+            emit(f"ef_grid.{codec}.{'ef' if ef else 'noef'}", t.us,
+                 f"uplink_bytes={ch.up_bytes:.3e};cum_sum_err={err:.3e};"
+                 f"residual_mass={ch.residual_norm():.3e}")
+    # acceptance: the sparse uplink is cheaper than int8, int8 than fp32
+    assert out[("topk", False)][0] < out[("int8", False)][0] \
+        < out[("fp32", False)][0], out
+    # feedback compensates the dropped mass across rounds
+    for codec in ("topk", "randk", "int8"):
+        assert out[(codec, True)][1] < out[(codec, False)][1], codec
+    # fp32 is lossless with or without feedback
+    assert out[("fp32", True)][1] == out[("fp32", False)][1] == 0.0
+    return out
+
+
 def run(quick: bool = False):
     arches = ("vgg16", "resnet8") if quick else ("vgg16", "resnet8",
                                                  "mobilenet")
     rounds = 8 if quick else 30
+    ef_grid(rounds=8 if quick else 16)
     for arch in arches:
         sweep(arch, rounds=8 if quick else 20)
     for arch in arches:
@@ -174,7 +226,14 @@ def run(quick: bool = False):
 if __name__ == "__main__":
     import argparse
 
+    from benchmarks.common import write_json
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="tiny-scale smoke (CI)")
-    run(quick=ap.parse_args().quick)
+    ap.add_argument("--out", default="",
+                    help="dump the emitted rows as JSON (CI artifact)")
+    args = ap.parse_args()
+    run(quick=args.quick)
+    if args.out:
+        write_json(args.out)

@@ -25,7 +25,16 @@ def make_channel(ccfg=None) -> CommChannel:
                              per_device_phase=ccfg.trace_phase_per_device)
     else:
         link = get_link(ccfg.link)
-    return CommChannel(codec=ccfg.codec, grad_codec=ccfg.grad_codec,
-                       link=link, latency=getattr(ccfg, "latency", 0.0),
+    # the *_codec fields are the preferred names; codec/grad_codec are
+    # the original storage fields they override when set
+    codec = getattr(ccfg, "uplink_codec", "") or ccfg.codec
+    grad = getattr(ccfg, "downlink_codec", "") or ccfg.grad_codec
+    return CommChannel(codec=codec, grad_codec=grad, link=link,
+                       dispatch_codec=getattr(ccfg, "dispatch_codec",
+                                              "fp32"),
+                       error_feedback=getattr(ccfg, "error_feedback",
+                                              False),
+                       topk_frac=getattr(ccfg, "topk_frac", None),
+                       latency=getattr(ccfg, "latency", 0.0),
                        uplink_capacity=getattr(ccfg, "uplink_capacity",
                                                0.0))

@@ -9,9 +9,21 @@ per device-round, which the engine's Eq.-1 tick converts to transfer
 time using the link model's rate at the current simulated clock.
 
 Byte convention (comm/README.md): payload bytes are exact from the
-encoded arrays; model dispatch/collection is fp32, i.e.
-``elements * BYTES_PER_ELEM`` — codecs apply to the cut-layer exchange
-only, matching the paper's Eq.-1 structure.
+encoded arrays. Model dispatch/collection defaults to fp32
+(``elements * BYTES_PER_ELEM``, matching the paper's Eq.-1 structure);
+with a non-fp32 ``dispatch_codec`` the Wc legs cross the wire through
+that codec too — the engine routes the client-portion parameters
+through ``dispatch_leaves`` / ``collect_leaves`` so dispatch
+compression error reaches training and the legs are metered exactly.
+
+``error_feedback=True`` turns the channel stateful: per-(device,
+direction) residual accumulators hold the compression error of the last
+transfer and add it back before the next encode (SEC/EF-style), so
+quantization/sparsification error is compensated across rounds instead
+of dropped. A residual is keyed by direction + device (+ leaf index for
+model legs) and resets whenever the tensor shape changes (a re-split
+changes the cut). fp32 stays bit-exact: its round-trip error is zero,
+so the accumulators never hold anything.
 
 Two transport-delay knobs ride on the channel (both default off, so the
 fp32/static seed regime is untouched):
@@ -30,6 +42,8 @@ fp32/static seed regime is untouched):
 """
 from __future__ import annotations
 
+import copy
+
 from repro.comm.codecs import Codec, get_codec
 from repro.comm.links import StaticLink
 
@@ -39,13 +53,34 @@ MESSAGES_PER_ROUND = 4   # dispatch, features up, grads down, collect
 
 class CommChannel:
     def __init__(self, codec="fp32", grad_codec=None, link=None, *,
+                 dispatch_codec="fp32", error_feedback: bool = False,
+                 topk_frac: float = None,
                  latency: float = 0.0, uplink_capacity: float = 0.0):
-        self.feature_codec = (codec if isinstance(codec, Codec)
-                              else get_codec(codec))
+        def _codec(c, role):
+            if not isinstance(c, Codec):
+                c = get_codec(c, topk_frac=topk_frac)
+                if getattr(c, "name", "") == "randk":
+                    # decorrelate the index masks of the up / down /
+                    # dispatch legs (same seed + lock-stepped call
+                    # counters would drop features and their gradients
+                    # at identical positions)
+                    c.seed = role
+            if error_feedback and getattr(c, "name", "") == "randk" \
+                    and c.unbiased:
+                # the n/k-scaled operator is not a contraction and
+                # makes the feedback accumulators diverge; the residual
+                # re-injection compensates the bias instead. Copy a
+                # caller-supplied instance rather than mutating it.
+                c = copy.copy(c)
+                c.unbiased = False
+            return c
+
+        self.feature_codec = _codec(codec, 0)
         if grad_codec is None or grad_codec == "":
             grad_codec = self.feature_codec.name
-        self.grad_codec = (grad_codec if isinstance(grad_codec, Codec)
-                           else get_codec(grad_codec))
+        self.grad_codec = _codec(grad_codec, 1)
+        self.dispatch_codec = _codec(dispatch_codec or "fp32", 2)
+        self.error_feedback = bool(error_feedback)
         self.link = link or StaticLink()
         if latency < 0:
             raise ValueError(f"latency must be >= 0: {latency}")
@@ -57,18 +92,60 @@ class CommChannel:
         self.uplink_capacity = float(uplink_capacity)
         self.up_bytes = 0.0          # device -> server (features)
         self.down_bytes = 0.0        # server -> device (dfx)
+        self.disp_up_bytes = 0.0     # device -> server (Wc/update collect)
+        self.disp_down_bytes = 0.0   # server -> device (Wc dispatch)
         self._round_up = {}          # cid -> uplink payload bytes this round
         self._round_down = {}        # cid -> downlink payload bytes
+        self._round_disp_up = {}     # cid -> collect-leg bytes this round
+        self._round_disp_down = {}   # cid -> dispatch-leg bytes
+        self._residuals = {}         # (direction, cid[, leaf]) -> tensor
+
+    # --------------------------------------------------- error feedback
+    @property
+    def dispatch_passthrough(self) -> bool:
+        """True when the model legs need no tensor round-trip at all:
+        fp32 is lossless, so there is no compression error to inject or
+        feed back regardless of ``error_feedback``. The engine then
+        skips the dispatch/collect walk entirely and cost models price
+        the legs analytically (identical bytes), which keeps the seed
+        path bit-exact by construction."""
+        return self.dispatch_codec.name == "fp32"
+
+    def _ef_roundtrip(self, codec, key, x):
+        """Codec round-trip with the residual accumulator folded in:
+        the error of THIS transfer is held under ``key`` and added back
+        before the NEXT transfer's encode. Without error feedback —
+        or for lossless fp32, whose residual is identically zero — this
+        is a plain round-trip."""
+        if not self.error_feedback or codec.name == "fp32":
+            return codec.roundtrip(x)
+        r = self._residuals.get(key)
+        if r is not None and r.shape == x.shape:
+            x = x + r.astype(x.dtype)
+        y, nbytes = codec.roundtrip(x)
+        self._residuals[key] = x - y
+        return y, nbytes
+
+    def residual_norm(self) -> float:
+        """Total L2 mass currently held by the feedback accumulators
+        (0.0 when feedback is off or nothing has been dropped yet)."""
+        import jax.numpy as jnp
+        return float(sum(jnp.sum(jnp.asarray(r, jnp.float32) ** 2) ** 0.5
+                         for r in self._residuals.values()))
+
+    def reset_feedback(self):
+        self._residuals = {}
 
     # ------------------------------------------------------------ wire
-    def _xfer(self, codec, cid, msg, meter):
+    def _xfer(self, codec, cid, msg, meter, direction):
         """msg: {'h': tensor, ...riders} or bare tensor."""
         if isinstance(msg, dict):
-            h, nbytes = codec.roundtrip(msg["h"])
+            h, nbytes = self._ef_roundtrip(codec, (direction, cid),
+                                           msg["h"])
             out = dict(msg, h=h)
             nbytes += AUX_BYTES * (len(msg) - 1)
         else:
-            out, nbytes = codec.roundtrip(msg)
+            out, nbytes = self._ef_roundtrip(codec, (direction, cid), msg)
         meter[cid] = meter.get(cid, 0.0) + nbytes
         return out, nbytes
 
@@ -76,24 +153,59 @@ class CommChannel:
         """Device cid uploads its cut-layer features. Returns what the
         server receives (codec round-trip applied)."""
         out, nbytes = self._xfer(self.feature_codec, cid, feats,
-                                 self._round_up)
+                                 self._round_up, "up")
         self.up_bytes += nbytes
         return out
 
     def downlink_grads(self, cid, dfx):
         """Server returns the feature gradient to device cid."""
         out, nbytes = self._xfer(self.grad_codec, cid, dfx,
-                                 self._round_down)
+                                 self._round_down, "down")
         self.down_bytes += nbytes
+        return out
+
+    # ------------------------------------------------------ model legs
+    def dispatch_leaves(self, cid, leaves):
+        """Server -> device: the Wc dispatch leg (or the FedAvg model
+        broadcast). Each leaf crosses the wire through the dispatch
+        codec; exact bytes are metered per device-round. Residual keys
+        carry the leaf index so per-(device, tensor) feedback state
+        survives across rounds (and resets on shape changes)."""
+        return self._model_leg(cid, leaves, "disp_down",
+                               self._round_disp_down)
+
+    def collect_leaves(self, cid, leaves):
+        """Device -> server: the updated-Wc collect leg (or the FedAvg
+        QSGD-style update upload)."""
+        return self._model_leg(cid, leaves, "disp_up",
+                               self._round_disp_up)
+
+    def _model_leg(self, cid, leaves, direction, meter):
+        if self.dispatch_passthrough:
+            return list(leaves)
+        out = []
+        nbytes = 0.0
+        for i, x in enumerate(leaves):
+            y, b = self._ef_roundtrip(self.dispatch_codec,
+                                      (direction, cid, i), x)
+            out.append(y)
+            nbytes += b
+        meter[cid] = meter.get(cid, 0.0) + nbytes
+        if direction == "disp_down":
+            self.disp_down_bytes += nbytes
+        else:
+            self.disp_up_bytes += nbytes
         return out
 
     # ------------------------------------------------------- accounting
     @property
     def total_bytes(self) -> float:
-        return self.up_bytes + self.down_bytes
+        return self.up_bytes + self.down_bytes \
+            + self.disp_up_bytes + self.disp_down_bytes
 
     def round_payload(self, cid) -> float:
-        """Exact payload bytes metered for cid since the last reset."""
+        """Exact cut-layer payload bytes metered for cid since the last
+        reset (model legs are under ``round_dispatch``)."""
         return self._round_up.get(cid, 0.0) \
             + self._round_down.get(cid, 0.0)
 
@@ -103,9 +215,23 @@ class CommChannel:
         return (self._round_up.get(cid, 0.0),
                 self._round_down.get(cid, 0.0))
 
+    def round_dispatch(self, cid) -> float:
+        """Exact model-leg bytes (Wc dispatch + collect) metered for cid
+        this round; 0.0 on the fp32 passthrough (cost models then price
+        the legs analytically — identical by construction)."""
+        return self._round_disp_up.get(cid, 0.0) \
+            + self._round_disp_down.get(cid, 0.0)
+
+    def round_dispatch_split(self, cid):
+        """(dispatch-down, collect-up) model-leg bytes for cid."""
+        return (self._round_disp_down.get(cid, 0.0),
+                self._round_disp_up.get(cid, 0.0))
+
     def reset_round(self):
         self._round_up = {}
         self._round_down = {}
+        self._round_disp_up = {}
+        self._round_disp_down = {}
 
     def estimate_uplink_payload(self, n_values: float,
                                 last_dim: int = 0) -> float:
@@ -129,15 +255,25 @@ class CommChannel:
                 + self.grad_codec.estimate_bytes(n_values, last_dim)
                 + 2 * AUX_BYTES)
 
+    def estimate_dispatch_leg(self, wc_size: float) -> float:
+        """Analytic one-way model-leg bytes for a wc_size-element client
+        portion under the dispatch codec (fp32 reproduces the seed's
+        ``wc_size * BYTES_PER_ELEM``)."""
+        return self.dispatch_codec.estimate_bytes(wc_size)
+
+    def estimate_dispatch_round(self, wc_size: float) -> float:
+        """Dispatch + collect legs (the Eq.-1 ``2|Wc|`` term, now priced
+        through the dispatch codec)."""
+        return 2.0 * self.estimate_dispatch_leg(wc_size)
+
     def analytic_round_time(self, dev, *, wc_size: float, n_values: float,
                             fc: float, fs: float, t: float):
         """Eq.-1 device-round (time, bytes) from analytic payloads: the
         single formula shared by the engine's warm-up branch, the
         benchmark sweep, and the scheduler tests — change the payload
         convention here and every consumer follows."""
-        from repro.core.simulation import (device_round_time_bytes,
-                                           model_dispatch_bytes)
-        nbytes = model_dispatch_bytes(wc_size=wc_size) \
+        from repro.core.simulation import device_round_time_bytes
+        nbytes = self.estimate_dispatch_round(wc_size) \
             + self.estimate_round_payload(n_values)
         t_round = device_round_time_bytes(dev, comm_bytes=nbytes, fc=fc,
                                           fs=fs, rate=self.rate(dev, t)) \

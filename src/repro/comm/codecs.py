@@ -9,13 +9,17 @@ training path — compression is never free by construction.
 
 Byte accounting is exact per payload (see comm/README.md): element
 payload bytes + per-row metadata (int8: fp32 scale+zp per row) + a fixed
-4-byte aux scalar carried alongside each feature tensor.
+4-byte aux scalar carried alongside each feature tensor. Sparsifiers
+(top-k / random-k) ship an index+value pair per surviving entry plus a
+4-byte count header per tensor.
 """
 from __future__ import annotations
 
 import math
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.int8_quant import int8_dequantize, int8_quantize
 
@@ -107,17 +111,117 @@ class Int8Codec(Codec):
                          + self.row_overhead_bytes)
 
 
+# ---------------------------------------------------------------------------
+# sparsification (index+value wire format)
+# ---------------------------------------------------------------------------
+DEFAULT_TOPK_FRAC = 0.1
+INDEX_BYTES = 4.0            # int32 flat index per surviving entry
+SPARSE_HEADER_BYTES = 4.0    # entry-count header per tensor
+
+
+class SparseCodec(Codec):
+    """Send only ``k = ceil(frac * size)`` entries of the flattened
+    tensor: each survivor crosses the wire as (int32 flat index, fp32
+    value) — 8 B/entry — plus a 4-byte count header per tensor. The
+    receiver scatters into zeros, so the round-trip error is exactly the
+    dropped mass; pair with the channel's error-feedback accumulators to
+    re-inject it next round instead of losing it."""
+
+    value_bytes = 4.0
+
+    def __init__(self, name: str, frac: float = DEFAULT_TOPK_FRAC):
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"topk_frac must be in (0, 1]: {frac}")
+        self.name = name
+        self.frac = float(frac)
+        self.bytes_per_value = self.frac * (self.value_bytes + INDEX_BYTES)
+
+    def _k(self, n: int) -> int:
+        return max(1, math.ceil(self.frac * n))
+
+    def _select(self, flat, k: int):
+        raise NotImplementedError
+
+    def _scale(self, k: int, n: int) -> float:
+        return 1.0
+
+    def encode(self, x):
+        flat = x.reshape(-1).astype(jnp.float32)
+        k = self._k(flat.size)
+        idx = self._select(flat, k)
+        vals = flat[idx] * self._scale(k, flat.size)
+        nbytes = k * (self.value_bytes + INDEX_BYTES) + SPARSE_HEADER_BYTES
+        return (idx, vals, x.shape), nbytes
+
+    def decode(self, payload, dtype=jnp.float32):
+        idx, vals, shape = payload
+        out = jnp.zeros(math.prod(shape), jnp.float32).at[idx].set(vals)
+        return out.reshape(shape).astype(dtype)
+
+    def estimate_bytes(self, n_values: float, last_dim: int = 0) -> float:
+        if not n_values:
+            return 0.0
+        return self._k(int(n_values)) * (self.value_bytes + INDEX_BYTES) \
+            + SPARSE_HEADER_BYTES
+
+
+class TopKCodec(SparseCodec):
+    """Keep the k largest-magnitude entries (biased; the standard
+    error-feedback partner)."""
+
+    def __init__(self, frac: float = DEFAULT_TOPK_FRAC):
+        super().__init__("topk", frac)
+
+    def _select(self, flat, k):
+        return jax.lax.top_k(jnp.abs(flat), k)[1]
+
+
+class RandomKCodec(SparseCodec):
+    """Keep k uniformly random entries, scaled by n/k so the estimator
+    is unbiased (QSGD-style). Index draws come from a deterministic
+    per-call counter seed, so runs are reproducible without threading
+    RNG state through the channel.
+
+    ``unbiased=False`` drops the n/k scaling: the scaled operator is
+    not a contraction (||x - C(x)|| can exceed ||x||), which makes
+    error-feedback accumulators diverge — the channel flips this flag
+    when feedback is on, since re-injecting the residual already
+    compensates the bias."""
+
+    def __init__(self, frac: float = DEFAULT_TOPK_FRAC, seed: int = 0,
+                 unbiased: bool = True):
+        super().__init__("randk", frac)
+        self.seed = seed
+        self.unbiased = unbiased
+        self._calls = 0
+
+    def _select(self, flat, k):
+        self._calls += 1
+        rng = np.random.default_rng((self.seed, self._calls))
+        return jnp.asarray(rng.choice(flat.size, size=k, replace=False))
+
+    def _scale(self, k, n):
+        return n / k if self.unbiased else 1.0
+
+
 _CODECS = {
     "fp32": Fp32Codec,
     "bf16": lambda: CastCodec("bf16", jnp.bfloat16),
     "fp16": lambda: CastCodec("fp16", jnp.float16),
     "int8": Int8Codec,
+    "topk": TopKCodec,
+    "randk": RandomKCodec,
 }
 
+_SPARSE = ("topk", "randk")
 
-def get_codec(name: str) -> Codec:
+
+def get_codec(name: str, *, topk_frac: float = None) -> Codec:
     if name not in _CODECS:
-        raise KeyError(f"unknown codec {name!r}; known: {sorted(_CODECS)}")
+        raise ValueError(
+            f"unknown codec {name!r}; known codecs: {list_codecs()}")
+    if name in _SPARSE and topk_frac is not None:
+        return _CODECS[name](topk_frac)
     return _CODECS[name]()
 
 

@@ -135,17 +135,30 @@ class CNNConfig:
 class CommConfig:
     """Transport knobs for the cut-layer exchange (repro.comm).
 
-    ``codec`` compresses uplink features, ``grad_codec`` the downlink
-    feature-gradients ('' -> same as ``codec``). ``link`` selects the
-    rate model: 'static' (Table 1) or 'trace' (time-varying multiplier
-    schedule — inline via trace_* fields or a JSON file, see
-    comm/README.md). ``latency`` adds a fixed per-message delay (four
-    messages per device-round); ``uplink_capacity`` bounds the Main
-    Server's shared ingress (Table-1 elements/s, 0 = uncontended) —
-    concurrent uploads in the phase pipeline then contend for it."""
+    ``uplink_codec`` compresses uplink features, ``downlink_codec`` the
+    downlink feature-gradients ('' -> same as uplink), and
+    ``dispatch_codec`` the model legs (Wc dispatch/collect, and the
+    FedAvg broadcast + QSGD-style update upload). ``codec`` /
+    ``grad_codec`` are the original names for the first two and remain
+    the storage fields; the ``*_codec`` aliases override them when set.
+    ``error_feedback`` turns on the channel's per-(device, tensor)
+    residual accumulators (compression error is added back before the
+    next round's encode); ``topk_frac`` sets the kept fraction of the
+    'topk'/'randk' sparsifiers. ``link`` selects the rate model:
+    'static' (Table 1) or 'trace' (time-varying multiplier schedule —
+    inline via trace_* fields or a JSON file, see comm/README.md).
+    ``latency`` adds a fixed per-message delay (four messages per
+    device-round); ``uplink_capacity`` bounds the Main Server's shared
+    ingress (Table-1 elements/s, 0 = uncontended) — concurrent uploads
+    in the phase pipeline then contend for it."""
 
-    codec: str = "fp32"                 # fp32 | bf16 | fp16 | int8
+    codec: str = "fp32"                 # fp32|bf16|fp16|int8|topk|randk
     grad_codec: str = ""                # '' -> follow codec
+    uplink_codec: str = ""              # alias: overrides codec when set
+    downlink_codec: str = ""            # alias: overrides grad_codec
+    dispatch_codec: str = "fp32"        # model legs (Wc / FedAvg W)
+    error_feedback: bool = False        # residual accumulators on
+    topk_frac: float = 0.1              # kept fraction for topk/randk
     link: str = "static"                # static | trace
     trace_times: tuple = ()             # ascending, starts at 0.0
     trace_multipliers: tuple = ()       # same length, > 0

@@ -83,7 +83,8 @@ from repro.comm.links import shared_link_finish_times
 from repro.core.simulation import (BYTES_PER_ELEM, CLIENT_FWD_FRAC,
                                    SERVER_FLOPS, device_round_time_bytes,
                                    fedavg_round_comm_bytes,
-                                   fedavg_round_time, model_dispatch_bytes)
+                                   fedavg_round_time,
+                                   fedavg_round_time_bytes)
 
 EXEC_MODES = ("sync", "semi_async")
 
@@ -114,15 +115,22 @@ class PhaseCost:
 
 
 class CostModel:
-    """(time, bytes) of one device-round at simulated time ``clock``."""
+    """(time, bytes) of one device-round at simulated time ``clock``.
+
+    ``payload_bytes`` / ``dispatch_bytes`` carry exact channel-metered
+    cut-layer and model-leg bytes when the caller materialized tensors
+    (None -> analytic estimates)."""
 
     def time_and_bytes(self, dev, split: int, clock: float,
-                       payload_bytes: Optional[float] = None):
+                       payload_bytes: Optional[float] = None,
+                       dispatch_bytes: Optional[float] = None):
         raise NotImplementedError
 
     def phase_cost(self, dev, split: int, clock: float,
                    up_payload: Optional[float] = None,
-                   down_payload: Optional[float] = None
+                   down_payload: Optional[float] = None,
+                   disp_down: Optional[float] = None,
+                   disp_up: Optional[float] = None
                    ) -> Optional[PhaseCost]:
         """Upload/server/download decomposition for the pipelined
         timeline (None -> no decomposition; the driver falls back to one
@@ -165,14 +173,15 @@ class AnalyticCost(CostModel):
             self._cache[split] = self._costs(split)
         return self._cache[split]
 
-    def time_and_bytes(self, dev, split, clock, payload_bytes=None):
+    def time_and_bytes(self, dev, split, clock, payload_bytes=None,
+                       dispatch_bytes=None):
         c, p = self.cost(split), self.p_of(_cid(dev))
         return self.channel.analytic_round_time(
             dev, wc_size=c["wc_size"], n_values=p * c["feat_size"],
             fc=p * c["fc"], fs=p * c["fs"], t=clock)
 
     def phase_cost(self, dev, split, clock, up_payload=None,
-                   down_payload=None):
+                   down_payload=None, disp_down=None, disp_up=None):
         c, p = self.cost(split), self.p_of(_cid(dev))
         ch = self.channel
         rate = ch.rate(dev, clock) * BYTES_PER_ELEM
@@ -181,19 +190,24 @@ class AnalyticCost(CostModel):
               else ch.estimate_uplink_payload(n_values))
         down = (down_payload if down_payload is not None
                 else ch.estimate_downlink_payload(n_values))
-        wc_b = c["wc_size"] * BYTES_PER_ELEM      # one-way model transfer
+        # one-way model transfers (dispatch codec; fp32 reproduces the
+        # seed's wc_size * BYTES_PER_ELEM)
+        wc_down = (disp_down if disp_down is not None
+                   else ch.estimate_dispatch_leg(c["wc_size"]))
+        wc_up = (disp_up if disp_up is not None
+                 else ch.estimate_dispatch_leg(c["wc_size"]))
         fc, fs = p * c["fc"], p * c["fs"]
         # half the round's messages ride each client-side phase, so the
         # atomic and phase paths charge the same total latency
         lat2 = 0.5 * MESSAGES_PER_ROUND * ch.latency
         return PhaseCost(
-            t_pre=lat2 + wc_b / rate
+            t_pre=lat2 + wc_down / rate
             + CLIENT_FWD_FRAC * fc / dev.comp,
             up_bytes=up, up_rate=rate,
             t_srv=fs / SERVER_FLOPS,
-            t_down=lat2 + (down + wc_b) / rate
+            t_down=lat2 + (down + wc_up) / rate
             + (1.0 - CLIENT_FWD_FRAC) * fc / dev.comp,
-            total_bytes=2.0 * wc_b + up + down)
+            total_bytes=wc_down + wc_up + up + down)
 
     def shared_uplink_bytes(self):
         cap = getattr(self.channel, "uplink_capacity", 0.0)
@@ -201,7 +215,7 @@ class AnalyticCost(CostModel):
 
     def forecast_time(self, dev, split, clock, horizon, load=1):
         c, p = self.cost(split), self.p_of(_cid(dev))
-        nbytes = model_dispatch_bytes(wc_size=c["wc_size"]) \
+        nbytes = self.channel.estimate_dispatch_round(c["wc_size"]) \
             + self.channel.estimate_round_payload(p * c["feat_size"])
         rate = self.channel.mean_rate(dev, clock,
                                       clock + max(horizon, 1e-9))
@@ -224,11 +238,14 @@ class MeteredCost(AnalyticCost):
     devices whose tensors never materialize, forecasts) fall back to the
     analytic estimate."""
 
-    def time_and_bytes(self, dev, split, clock, payload_bytes=None):
+    def time_and_bytes(self, dev, split, clock, payload_bytes=None,
+                       dispatch_bytes=None):
         if payload_bytes is None:
             return super().time_and_bytes(dev, split, clock)
         c, p = self.cost(split), self.p_of(_cid(dev))
-        nbytes = model_dispatch_bytes(wc_size=c["wc_size"]) + payload_bytes
+        disp = (dispatch_bytes if dispatch_bytes is not None
+                else self.channel.estimate_dispatch_round(c["wc_size"]))
+        nbytes = disp + payload_bytes
         t = device_round_time_bytes(
             dev, comm_bytes=nbytes, fc=p * c["fc"], fs=p * c["fs"],
             rate=self.channel.rate(dev, clock)) \
@@ -239,25 +256,44 @@ class MeteredCost(AnalyticCost):
 class FedAvgCost(CostModel):
     """Full-model FedAvg baseline round cost (split is ignored). No cut
     layer, so there is nothing to phase-split: under ``pipeline=True``
-    FedAvg rounds stay atomic events."""
+    FedAvg rounds stay atomic events.
+
+    With a ``channel`` the model legs are priced through its dispatch
+    codec (the QSGD-style compressed-FedAvg baseline: broadcast down,
+    compressed update up); exact metered ``dispatch_bytes`` override
+    the analytic estimate when the engine materialized the transfer."""
 
     def __init__(self, costs_full, *, p: int = 128,
-                 p_of: Optional[Callable] = None):
+                 p_of: Optional[Callable] = None, channel=None):
         self._costs = costs_full if callable(costs_full) \
             else (lambda: costs_full)
         self._cache = None
         self.p_of = p_of or (lambda cid: p)
+        self.channel = channel
 
     def cost(self) -> dict:
         if self._cache is None:
             self._cache = self._costs()
         return self._cache
 
-    def time_and_bytes(self, dev, split, clock, payload_bytes=None):
-        c = self.cost()
-        t = fedavg_round_time(dev, w_size=c["w_size"],
-                              p=self.p_of(_cid(dev)), f_full=c["f_full"])
-        return t, fedavg_round_comm_bytes(w_size=c["w_size"])
+    def time_and_bytes(self, dev, split, clock, payload_bytes=None,
+                       dispatch_bytes=None):
+        c, p = self.cost(), self.p_of(_cid(dev))
+        if dispatch_bytes is not None:
+            nbytes = dispatch_bytes
+        elif self.channel is not None:
+            nbytes = self.channel.estimate_dispatch_round(c["w_size"])
+        else:
+            nbytes = fedavg_round_comm_bytes(w_size=c["w_size"])
+        if dispatch_bytes is None and self.channel is None:
+            t = fedavg_round_time(dev, w_size=c["w_size"], p=p,
+                                  f_full=c["f_full"])
+        else:
+            rate = (self.channel.rate(dev, clock) if self.channel
+                    else None)
+            t = fedavg_round_time_bytes(dev, comm_bytes=nbytes, p=p,
+                                        f_full=c["f_full"], rate=rate)
+        return t, nbytes
 
 
 class CallableCost(CostModel):
@@ -272,14 +308,15 @@ class CallableCost(CostModel):
         self.t_of, self.bytes_of, self.clocked = t_of, bytes_of, clocked
         self.phases_of = phases_of
 
-    def time_and_bytes(self, dev, split, clock, payload_bytes=None):
+    def time_and_bytes(self, dev, split, clock, payload_bytes=None,
+                       dispatch_bytes=None):
         cid = _cid(dev)
         t = self.t_of(cid, split, clock) if self.clocked \
             else self.t_of(cid, split)
         return t, (self.bytes_of(cid, split) if self.bytes_of else 0.0)
 
     def phase_cost(self, dev, split, clock, up_payload=None,
-                   down_payload=None):
+                   down_payload=None, disp_down=None, disp_up=None):
         if self.phases_of is None:
             return None
         return self.phases_of(_cid(dev), split)
@@ -380,9 +417,11 @@ class RoundDriver:
         work after selection; the report dict may carry
         ``payload_bytes`` ({cid: metered wire bytes, cut-layer only}),
         ``payload_up_bytes`` / ``payload_down_bytes`` (the per-direction
-        split the pipelined timeline prices) and ``groups``
-        ({work_key: (cid, ...)} — commit granularity; default one work
-        item per participant keyed by cid).
+        split the pipelined timeline prices), ``dispatch_bytes``
+        ({cid: metered model-leg bytes, dispatch + collect} with the
+        per-direction ``dispatch_down_bytes`` / ``dispatch_up_bytes``)
+        and ``groups`` ({work_key: (cid, ...)} — commit granularity;
+        default one work item per participant keyed by cid).
         """
         part = [_cid(p) for p in participants]
         part_set = set(part)
@@ -409,6 +448,9 @@ class RoundDriver:
         payloads = (report or {}).get("payload_bytes", {})
         pay_up = (report or {}).get("payload_up_bytes", {})
         pay_down = (report or {}).get("payload_down_bytes", {})
+        dispatch = (report or {}).get("dispatch_bytes", {})
+        disp_down = (report or {}).get("dispatch_down_bytes", {})
+        disp_up = (report or {}).get("dispatch_up_bytes", {})
         groups = (report or {}).get("groups")
         if groups is None:
             groups = {c: (c,) for c in part}
@@ -416,13 +458,16 @@ class RoundDriver:
         phases: dict = {}
         if self.pipeline:
             commits, times, comm, phases = self._phase_schedule(
-                part, splits, payloads, pay_up, pay_down, clock0)
+                part, splits, payloads, pay_up, pay_down,
+                disp_down, disp_up, clock0)
         else:
             times, comm = {}, 0.0
             for c in part:
                 dev = self._dev_by_id.get(c, c)
                 t, nbytes = self.cost.time_and_bytes(
-                    dev, splits[c], clock0, payload_bytes=payloads.get(c))
+                    dev, splits[c], clock0,
+                    payload_bytes=payloads.get(c),
+                    dispatch_bytes=dispatch.get(c))
                 times[c] = t
                 comm += nbytes
             commits = {c: clock0 + times[c] for c in part}
@@ -448,7 +493,7 @@ class RoundDriver:
 
     # --------------------------------------------------- phase pipeline
     def _phase_schedule(self, part, splits, payloads, pay_up, pay_down,
-                        clock0):
+                        disp_down, disp_up, clock0):
         """Chain upload → server-compute → download events per device.
         Returns ({cid: commit time}, {cid: full round duration},
         round wire bytes, {cid: phase durations}).
@@ -464,7 +509,8 @@ class RoundDriver:
             dev = self._dev_by_id.get(c, c)
             quants[c] = self.cost.phase_cost(
                 dev, splits[c], clock0, up_payload=pay_up.get(c),
-                down_payload=pay_down.get(c))
+                down_payload=pay_down.get(c),
+                disp_down=disp_down.get(c), disp_up=disp_up.get(c))
 
         jobs, order = [], []
         for c, pc in quants.items():
@@ -479,9 +525,11 @@ class RoundDriver:
         for c, pc in quants.items():
             if pc is None:             # no decomposition: atomic event
                 dev = self._dev_by_id.get(c, c)
+                disp = (disp_down.get(c, 0.0) + disp_up.get(c, 0.0)
+                        if c in disp_down or c in disp_up else None)
                 t, nbytes = self.cost.time_and_bytes(
                     dev, splits[c], clock0,
-                    payload_bytes=payloads.get(c))
+                    payload_bytes=payloads.get(c), dispatch_bytes=disp)
                 commits[c] = clock0 + t
                 times[c] = t
                 comm += nbytes

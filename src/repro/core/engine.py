@@ -104,7 +104,7 @@ class S2FLEngine:
                 lambda: flops_util.split_costs(self.model,
                                                self.model.n_units,
                                                seq_len=self._seq_len()),
-                p_of=self._p_of)
+                p_of=self._p_of, channel=self.channel)
         else:
             cost = MeteredCost(
                 self.channel,
@@ -160,6 +160,47 @@ class S2FLEngine:
         time table would disagree with the metered post-warm-up times."""
         return self.ecfg.local_steps * min(self.ecfg.batch_size,
                                            int(self._data_size(cid)))
+
+    # ------------------------------------------------- model wire legs
+    def _wc_leg(self, cid, params, split, leg):
+        """Route the client-portion segments through the channel's model
+        leg (``leg``: 'dispatch' server->device Wc, 'collect'
+        device->server updated Wc), so dispatch-codec round-trip error
+        reaches training and the 2|Wc| term is metered exactly. The
+        fp32 passthrough (lossless: nothing to compress or feed back)
+        skips the walk entirely — the cost models then price the legs
+        analytically (bit-exact seed path)."""
+        if self.channel.dispatch_passthrough:
+            return params
+        from repro.utils.tree import get_subtree, set_subtree
+        names = self.model.client_segments(split)
+        paths = [p for n, p in self.model.segments() if n in names]
+        subs = [get_subtree(params, p) for p in paths]
+        leaves, treedef = jax.tree.flatten(subs)
+        fn = (self.channel.dispatch_leaves if leg == "dispatch"
+              else self.channel.collect_leaves)
+        new = jax.tree.unflatten(treedef, fn(cid, leaves))
+        out = params
+        for p, sub in zip(paths, new):
+            out = set_subtree(out, p, sub)
+        return out
+
+    def _with_dispatch_report(self, report, participants):
+        """Attach the metered model-leg bytes to the driver report. On
+        the fp32 passthrough nothing was metered and the keys stay
+        absent, so cost models fall back to the analytic 2|Wc| term —
+        the exact seed pricing."""
+        if self.channel.dispatch_passthrough:
+            return report
+        per_dir = {c: self.channel.round_dispatch_split(c)
+                   for c in participants}
+        report["dispatch_bytes"] = {c: per_dir[c][0] + per_dir[c][1]
+                                    for c in participants}
+        report["dispatch_down_bytes"] = {c: per_dir[c][0]
+                                         for c in participants}
+        report["dispatch_up_bytes"] = {c: per_dir[c][1]
+                                       for c in participants}
+        return report
 
     # ------------------------------------------------------- jitted pieces
     def _get_client_fwd(self, split):
@@ -237,10 +278,14 @@ class S2FLEngine:
             else:
                 groups = [(c,) for c in participants]
 
-            client_params = {c: self.params for c in participants}
             server_copies = {gi: self.params for gi in range(len(groups))}
 
             self.channel.reset_round()
+            # Steps 1/2: Wc crosses the downlink through the dispatch
+            # codec (passthrough when fp32: lossless)
+            client_params = {c: self._wc_leg(c, self.params, splits[c],
+                                            "dispatch")
+                             for c in participants}
             for step_i in range(ecfg.local_steps):
                 for gi, group in enumerate(groups):
                     batches = [self._sample_batch(c) for c in group]
@@ -266,6 +311,12 @@ class S2FLEngine:
                         client_params[c] = self._get_client_update(
                             splits[c])(client_params[c], b, dfx)
 
+            # step 8.5: the trained Wc rides back over the collect leg
+            # (codec round-trip + exact metering, passthrough on fp32)
+            for c in participants:
+                client_params[c] = self._wc_leg(c, client_params[c],
+                                                splits[c], "collect")
+
             # hand the driver commit-granularity work items: one per
             # group, held here until its completion event lands
             keyed = {}
@@ -282,13 +333,15 @@ class S2FLEngine:
             # metered uplink (features) and downlink (dfx) separately
             per_dir = {c: self.channel.round_payload_split(c)
                        for c in participants}
-            return {"groups": keyed,
-                    "payload_bytes": {c: self.channel.round_payload(c)
+            return self._with_dispatch_report(
+                {"groups": keyed,
+                 "payload_bytes": {c: self.channel.round_payload(c)
+                                   for c in participants},
+                 "payload_up_bytes": {c: per_dir[c][0]
                                       for c in participants},
-                    "payload_up_bytes": {c: per_dir[c][0]
-                                         for c in participants},
-                    "payload_down_bytes": {c: per_dir[c][1]
-                                           for c in participants}}
+                 "payload_down_bytes": {c: per_dir[c][1]
+                                        for c in participants}},
+                participants)
 
         rec = self.driver.run_round(participants, execute=execute)
         self._commit(rec.committed)
@@ -319,25 +372,57 @@ class S2FLEngine:
         losses = []
 
         def execute(splits):
+            self.channel.reset_round()
             keyed = {}
             for c in participants:
-                p = self.params
-                l = None
+                # broadcast leg: W reaches the client through the
+                # dispatch codec (passthrough on fp32: lossless)
+                rx = self._fedavg_broadcast(c)
+                p, l = rx, None
                 for _ in range(ecfg.local_steps):
                     p, l = self._fedavg_step(p, self._sample_batch(c))
                 if l is not None:
                     losses.append(float(l))
+                # QSGD-style collect leg: the client uploads its
+                # compressed model DELTA; the server reconstructs
+                # rx + decode(encode(p - rx))
+                p = self._fedavg_collect(c, rx, p)
                 gid = self._next_gid
                 self._next_gid += 1
                 keyed[gid] = (c,)
                 self._held[gid] = (p, self._data_size(c))
-            return {"groups": keyed}
+            return self._with_dispatch_report({"groups": keyed},
+                                              participants)
 
         rec = self.driver.run_round(participants, execute=execute)
         self._commit(rec.committed)
         # mean over participating clients (not the last client's)
         loss = float(np.mean(losses)) if losses else float("nan")
         return self._record(loss, rec)
+
+    def _fedavg_broadcast(self, cid):
+        """Server -> client full-model broadcast through the dispatch
+        codec."""
+        if self.channel.dispatch_passthrough:
+            return self.params
+        leaves, treedef = jax.tree.flatten(self.params)
+        return jax.tree.unflatten(treedef,
+                                  self.channel.dispatch_leaves(cid,
+                                                               leaves))
+
+    def _fedavg_collect(self, cid, base, p):
+        """Client -> server QSGD-style update: compress the model delta
+        against the broadcast the client actually received (error
+        feedback, when on, accumulates per (device, leaf))."""
+        if self.channel.dispatch_passthrough:
+            return p
+        lb, treedef = jax.tree.flatten(base)
+        lp = jax.tree.leaves(p)
+        deltas = self.channel.collect_leaves(
+            cid, [a - b for a, b in zip(lp, lb)])
+        return jax.tree.unflatten(
+            treedef, [(b + d.astype(b.dtype)).astype(b.dtype)
+                      for b, d in zip(lb, deltas)])
 
     def _commit(self, gids):
         """Aggregate the work items whose completion events landed in
@@ -366,6 +451,11 @@ class S2FLEngine:
                  "clock": self.clock, "comm": self.comm,
                  "comm_up": self.channel.up_bytes,
                  "comm_down": self.channel.down_bytes,
+                 # model-leg bytes actually metered (0.0 on the fp32
+                 # passthrough, where the 2|Wc| term is priced
+                 # analytically inside "comm")
+                 "comm_dispatch": self.channel.disp_up_bytes
+                 + self.channel.disp_down_bytes,
                  "loss": loss,
                  "committed": len(rec.committed),
                  "pending": rec.pending}

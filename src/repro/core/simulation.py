@@ -80,16 +80,19 @@ def device_round_time_bytes(dev: Device, *, comm_bytes: float, fc: float,
     return comm_bytes / r + fc / dev.comp + fs / SERVER_FLOPS
 
 
-def model_dispatch_bytes(*, wc_size: float) -> float:
-    """Wc down + updated Wc back up, fp32 (codecs cover the cut-layer
-    exchange only)."""
-    return 2.0 * wc_size * BYTES_PER_ELEM
-
-
 def fedavg_round_time(dev: Device, *, w_size: float, p: int,
                       f_full: float) -> float:
     """FedAvg baseline: full model both ways, all compute on device."""
     return 2.0 * w_size / dev.rate + p * f_full / dev.comp
+
+
+def fedavg_round_time_bytes(dev: Device, *, comm_bytes: float, p: int,
+                            f_full: float, rate: float = None) -> float:
+    """FedAvg round time from channel-priced model-leg bytes (the
+    compressed-FedAvg baseline; fp32 bytes reproduce fedavg_round_time
+    exactly — both scale by powers of two)."""
+    r = (dev.rate if rate is None else rate) * BYTES_PER_ELEM
+    return comm_bytes / r + p * f_full / dev.comp
 
 
 def fedavg_round_comm_bytes(*, w_size: float) -> float:

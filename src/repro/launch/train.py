@@ -63,12 +63,23 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
     # transport (repro.comm)
-    ap.add_argument("--codec", default="fp32",
-                    choices=["fp32", "bf16", "fp16", "int8"],
+    codecs = ["fp32", "bf16", "fp16", "int8", "topk", "randk"]
+    ap.add_argument("--codec", "--uplink-codec", dest="codec",
+                    default="fp32", choices=codecs,
                     help="uplink feature codec")
-    ap.add_argument("--grad-codec", default="",
-                    choices=["", "fp32", "bf16", "fp16", "int8"],
+    ap.add_argument("--grad-codec", "--downlink-codec", dest="grad_codec",
+                    default="", choices=[""] + codecs,
                     help="downlink dfx codec (default: same as --codec)")
+    ap.add_argument("--dispatch-codec", default="fp32", choices=codecs,
+                    help="model-leg codec: Wc dispatch/collect (and the "
+                         "FedAvg broadcast + QSGD-style update upload); "
+                         "fp32 = the seed's uncompressed legs")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="per-(device, tensor) residual accumulators: "
+                         "compression error is added back before the "
+                         "next round's encode")
+    ap.add_argument("--topk-frac", type=float, default=0.1,
+                    help="kept fraction for the topk/randk sparsifiers")
     ap.add_argument("--link-trace", default="",
                     help="JSON LinkTrace file (default: static Table-1)")
     ap.add_argument("--latency", type=float, default=0.0,
@@ -108,6 +119,9 @@ def main(argv=None):
         seed=args.seed)
 
     ccfg = CommConfig(codec=args.codec, grad_codec=args.grad_codec,
+                      dispatch_codec=args.dispatch_codec,
+                      error_feedback=args.error_feedback,
+                      topk_frac=args.topk_frac,
                       link="trace" if args.link_trace else "static",
                       trace_file=args.link_trace, latency=args.latency,
                       uplink_capacity=args.contention)

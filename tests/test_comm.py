@@ -93,8 +93,9 @@ def test_int8_constant_input():
 # codecs
 # ---------------------------------------------------------------------------
 def test_codec_registry():
-    assert set(list_codecs()) == {"fp32", "bf16", "fp16", "int8"}
-    with pytest.raises(KeyError):
+    assert set(list_codecs()) == {"fp32", "bf16", "fp16", "int8",
+                                  "topk", "randk"}
+    with pytest.raises(ValueError, match="zstd"):
         get_codec("zstd")
 
 

@@ -1,0 +1,273 @@
+"""Sparsification + error-feedback compression (repro.comm).
+
+Covers: the sparse codec wire format (index+value bytes, exact metering
+vs the analytic estimate, top-k really keeps the largest magnitudes),
+the channel's residual accumulators (the EF telescoping identity
+``sum(delivered) = sum(sent) - final_residual`` as a hypothesis
+property; residual reset on shape change; randk's unbiasedness scaling
+disabled under feedback), dispatch-leg compression through the engine
+(the 2|Wc| legs metered exactly, comm shrinks, training still learns),
+the QSGD-style compressed-FedAvg baseline, and the bit-exactness
+goldens: ``codec=fp32, error_feedback=False`` reproduces the pre-PR
+engine's clock / comm / parameters EXACTLY (constants captured from the
+engine before this PR's compression layer landed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.comm import CommChannel, get_codec
+from repro.comm.codecs import (INDEX_BYTES, SPARSE_HEADER_BYTES,
+                               RandomKCodec, TopKCodec)
+from repro.configs import CommConfig, get_config
+
+KEY = jax.random.PRNGKey(3)
+
+
+# ---------------------------------------------------------------------------
+# sparse codecs: wire format + selection semantics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["topk", "randk"])
+def test_sparse_codec_bytes_and_estimate(name):
+    codec = get_codec(name, topk_frac=0.1)
+    x = jax.random.normal(KEY, (8, 512))
+    out, nbytes = codec.roundtrip(x)
+    assert out.shape == x.shape and out.dtype == x.dtype
+    k = int(np.ceil(0.1 * x.size))
+    assert nbytes == k * (4.0 + INDEX_BYTES) + SPARSE_HEADER_BYTES
+    assert codec.estimate_bytes(x.size) == pytest.approx(nbytes)
+    # a frac-0.1 sparsifier is cheaper on the wire than int8 and fp32
+    assert nbytes < get_codec("int8").estimate_bytes(x.size) \
+        < get_codec("fp32").estimate_bytes(x.size)
+
+
+def test_topk_keeps_largest_magnitudes():
+    x = jnp.asarray([[0.1, -5.0, 0.2, 3.0, -0.3, 0.01, 2.0, -0.02]])
+    codec = TopKCodec(frac=3 / 8)
+    out, _ = codec.roundtrip(x)
+    np.testing.assert_allclose(
+        np.asarray(out), [[0.0, -5.0, 0.0, 3.0, 0.0, 0.0, 2.0, 0.0]])
+
+
+def test_randk_unbiased_scaling_and_determinism():
+    x = jax.random.normal(KEY, (64, 64))
+    c1 = RandomKCodec(frac=0.25, seed=5)
+    c2 = RandomKCodec(frac=0.25, seed=5)
+    y1, _ = c1.roundtrip(x)
+    y2, _ = c2.roundtrip(x)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    # kept entries are scaled by n/k = 4 (unbiased estimator)
+    nz = np.asarray(y1)[np.asarray(y1) != 0.0]
+    flat = np.asarray(x).reshape(-1)
+    assert all(any(np.isclose(v, 4.0 * f) for f in flat) for v in nz[:8])
+    # E[decode] ~ x: the mean over many draws approaches the input
+    acc = np.zeros(x.shape)
+    for i in range(40):
+        acc += np.asarray(RandomKCodec(frac=0.25, seed=i).roundtrip(x)[0])
+    assert np.abs(acc / 40 - np.asarray(x)).mean() \
+        < 0.5 * np.abs(np.asarray(x)).mean()
+
+
+def test_get_codec_unknown_raises_valueerror_naming_known():
+    with pytest.raises(ValueError) as ei:
+        get_codec("zstd")
+    msg = str(ei.value)
+    assert "zstd" in msg and "topk" in msg and "fp32" in msg
+    with pytest.raises(ValueError):
+        get_codec("topk", topk_frac=0.0)
+    with pytest.raises(ValueError):
+        get_codec("topk", topk_frac=1.5)
+
+
+# ---------------------------------------------------------------------------
+# error-feedback accumulators on the channel
+# ---------------------------------------------------------------------------
+def _ef_identity_error(codec, rounds, shape, frac, seed):
+    """max |sum(sent) - sum(delivered) - residual| over elements."""
+    ch = CommChannel(codec=codec, error_feedback=True, topk_frac=frac)
+    sent = np.zeros(shape)
+    got = np.zeros(shape)
+    for r in range(rounds):
+        x = jax.random.normal(jax.random.PRNGKey(seed * 97 + r), shape)
+        rx = ch.uplink_features(0, x)
+        sent += np.asarray(x, np.float64)
+        got += np.asarray(rx, np.float64)
+    res = np.asarray(ch._residuals[("up", 0)], np.float64)
+    return float(np.abs(sent - got - res).max()), sent, got, res
+
+
+@settings(max_examples=25, deadline=None)
+@given(codec=st.sampled_from(["topk", "randk", "int8", "bf16"]),
+       rounds=st.integers(min_value=2, max_value=10),
+       rows=st.integers(min_value=1, max_value=6),
+       cols=st.sampled_from([32, 257, 512]),
+       frac=st.floats(min_value=0.05, max_value=0.5),
+       seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_ef_transmitted_sum_telescopes(codec, rounds, rows, cols, frac,
+                                       seed):
+    """The EF recursion y_t = (x_t + e_{t-1}) - e_t telescopes: the sum
+    of delivered tensors equals the sum of inputs minus exactly the
+    final residual — compressed-with-feedback updates summed over
+    rounds converge to the uncompressed sum up to one residual."""
+    err, sent, got, res = _ef_identity_error(codec, rounds, (rows, cols),
+                                             frac, seed)
+    # float32 round-trips accumulate ~1e-6-scale noise per round
+    assert err <= 5e-5 * max(1.0, np.abs(sent).max())
+    # ...and the residual is bounded (the compressor is a contraction
+    # under feedback), so the cumulative sums stay within tolerance
+    assert np.abs(res).max() <= np.abs(sent).max() + 10.0
+
+
+def test_ef_identity_concrete():
+    """Shim-proof concrete instance of the property above."""
+    err, sent, _, res = _ef_identity_error("topk", 8, (4, 256), 0.1, 1)
+    assert err <= 5e-5 * np.abs(sent).max()
+    assert np.abs(res).sum() > 0.0          # top-k really dropped mass
+
+
+def test_ef_reduces_cumulative_error_for_sparsifiers():
+    """Feedback re-injects dropped mass, so the cumulative-sum error
+    after T rounds is smaller than the feedback-free drift."""
+    shape, T = (4, 256), 10
+    for codec in ("topk", "int8"):
+        drift = {}
+        for ef in (False, True):
+            ch = CommChannel(codec=codec, error_feedback=ef,
+                             topk_frac=0.1)
+            diff = np.zeros(shape)
+            for r in range(T):
+                x = jax.random.normal(jax.random.PRNGKey(r), shape)
+                rx = ch.uplink_features(0, x)
+                diff += np.asarray(x, np.float64) \
+                    - np.asarray(rx, np.float64)
+            drift[ef] = float(np.linalg.norm(diff))
+        assert drift[True] < drift[False], codec
+
+
+def test_ef_residual_resets_on_shape_change():
+    ch = CommChannel(codec="topk", error_feedback=True, topk_frac=0.1)
+    ch.uplink_features(0, jax.random.normal(KEY, (4, 256)))
+    assert ch._residuals[("up", 0)].shape == (4, 256)
+    # a re-split changes the cut-tensor shape: stale residual ignored
+    x2 = jax.random.normal(KEY, (2, 128))
+    rx = ch.uplink_features(0, x2)
+    assert rx.shape == x2.shape
+    assert ch._residuals[("up", 0)].shape == (2, 128)
+    ch.reset_feedback()
+    assert ch.residual_norm() == 0.0
+
+
+def test_ef_randk_scaling_disabled_under_feedback():
+    """The n/k-scaled rand-k operator is not a contraction and diverges
+    under feedback — the channel must construct it unscaled."""
+    ch = CommChannel(codec="randk", error_feedback=True)
+    assert ch.feature_codec.unbiased is False
+    assert CommChannel(codec="randk").feature_codec.unbiased is True
+
+
+def test_ef_off_is_stateless():
+    ch = CommChannel(codec="topk", topk_frac=0.1)
+    ch.uplink_features(0, jax.random.normal(KEY, (4, 256)))
+    assert ch._residuals == {} and ch.residual_norm() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# engine goldens: fp32 / no-feedback is bit-exact with the pre-PR engine
+# ---------------------------------------------------------------------------
+# Captured from the engine at the commit BEFORE the compression layer
+# (sparsifiers, error feedback, dispatch codec) landed: resnet8 S²FL,
+# 240 samples / 6 clients / alpha=0.3 / seed 0, 3 rounds of 4 clients,
+# batch 16, group 2, default plan; FedAvg same data, 2 rounds.
+GOLDEN_S2FL = dict(clock=1.67794774976, comm=21778016.0,
+                   param_sum=246.27124186104606,
+                   losses=[2.5106738805770874, 2.3420581817626953,
+                           2.287154197692871])
+GOLDEN_FEDAVG = dict(clock=0.76929696, comm=4982400.0,
+                     param_sum=246.3688663195759,
+                     losses=[2.482684850692749, 2.3446030616760254])
+
+
+def _golden_engine(mode, rounds, comm=None):
+    from repro.core.engine import EngineConfig, S2FLEngine
+    from repro.data.partition import federate
+    from repro.data.synthetic import make_image_dataset
+    from repro.models import SplitModel
+
+    ds = make_image_dataset(240, seed=0)
+    fed = federate(ds, 6, alpha=0.3, seed=0)
+    model = SplitModel(get_config("resnet8"))
+    ecfg = EngineConfig(mode=mode, rounds=rounds, clients_per_round=4,
+                        batch_size=16, group_size=2, seed=0,
+                        comm=comm or CommConfig())
+    eng = S2FLEngine(model, fed, ecfg)
+    eng.run(rounds=rounds)
+    return eng
+
+
+def _param_sum(eng):
+    return float(np.sum([np.asarray(l, np.float64).sum()
+                         for l in jax.tree.leaves(eng.params)]))
+
+
+def test_golden_fp32_no_feedback_bit_exact():
+    """codec=fp32, error_feedback=False must stay EXACTLY the pre-PR
+    engine: same clock, same wire bytes, same trained parameters (the
+    dispatch passthrough skips the model-leg walk entirely, so nothing
+    new touches the fp32 path)."""
+    eng = _golden_engine("s2fl", 3)
+    assert eng.clock == GOLDEN_S2FL["clock"]
+    assert eng.comm == GOLDEN_S2FL["comm"]
+    assert _param_sum(eng) == GOLDEN_S2FL["param_sum"]
+    assert [h["loss"] for h in eng.history] == GOLDEN_S2FL["losses"]
+    assert eng.history[-1]["comm_dispatch"] == 0.0   # nothing metered
+
+
+def test_golden_fedavg_fp32_bit_exact():
+    eng = _golden_engine("fedavg", 2)
+    assert eng.clock == GOLDEN_FEDAVG["clock"]
+    assert eng.comm == GOLDEN_FEDAVG["comm"]
+    assert _param_sum(eng) == GOLDEN_FEDAVG["param_sum"]
+    assert [h["loss"] for h in eng.history] == GOLDEN_FEDAVG["losses"]
+
+
+# ---------------------------------------------------------------------------
+# dispatch-leg compression through the engine
+# ---------------------------------------------------------------------------
+def test_engine_dispatch_codec_meters_and_cuts_comm():
+    """An int8 dispatch codec compresses the 2|Wc| legs: the model-leg
+    bytes are metered exactly, total comm shrinks vs fp32 at matched
+    rounds, and training still decreases the loss."""
+    base = _golden_engine("s2fl", 3)
+    comp = _golden_engine("s2fl", 3,
+                          comm=CommConfig(dispatch_codec="int8"))
+    assert comp.history[-1]["comm_dispatch"] > 0.0
+    assert comp.comm < base.comm                 # 2|Wc| really shrank
+    assert comp.clock < base.clock               # and the clock follows
+    losses = [h["loss"] for h in comp.history]
+    assert np.isfinite(losses).all() and losses[-1] < losses[0]
+
+
+def test_engine_fedavg_qsgd_baseline():
+    """Compressed-FedAvg: broadcast + QSGD-style int8 update upload cut
+    the round bytes well below the fp32 baseline while the loss still
+    tracks it closely."""
+    base = _golden_engine("fedavg", 2)
+    qsgd = _golden_engine("fedavg", 2,
+                          comm=CommConfig(dispatch_codec="int8"))
+    assert qsgd.comm < base.comm / 3.0           # ~4x fewer model bytes
+    assert np.isfinite([h["loss"] for h in qsgd.history]).all()
+    assert abs(qsgd.history[-1]["loss"] - base.history[-1]["loss"]) < 0.1
+
+
+def test_engine_uplink_topk_with_feedback_trains():
+    """Top-k features + error feedback: large byte cut, loss still
+    decreasing, residual state actually populated."""
+    eng = _golden_engine("s2fl", 3,
+                         comm=CommConfig(codec="topk", topk_frac=0.05,
+                                         error_feedback=True))
+    base = GOLDEN_S2FL["comm"]
+    assert eng.comm < base / 2.0
+    losses = [h["loss"] for h in eng.history]
+    assert np.isfinite(losses).all() and losses[-1] < losses[0]
+    assert eng.channel.residual_norm() > 0.0
