@@ -5,8 +5,9 @@ link-trace format, byte-accounting convention)."""
 from repro.comm.channel import (AUX_BYTES, MESSAGES_PER_ROUND,  # noqa: F401
                                 CommChannel)
 from repro.comm.codecs import Codec, get_codec, list_codecs  # noqa: F401
-from repro.comm.links import (LinkTrace, StaticLink, get_link,  # noqa: F401
-                              shared_link_finish_times)
+from repro.comm.links import (FluidLink, LatencySampler,  # noqa: F401
+                              LinkTrace, StaticLink, fluid_schedule,
+                              get_link, shared_link_finish_times)
 
 
 def make_channel(ccfg=None) -> CommChannel:
@@ -37,4 +38,11 @@ def make_channel(ccfg=None) -> CommChannel:
                        topk_frac=getattr(ccfg, "topk_frac", None),
                        latency=getattr(ccfg, "latency", 0.0),
                        uplink_capacity=getattr(ccfg, "uplink_capacity",
-                                               0.0))
+                                               0.0),
+                       downlink_capacity=getattr(ccfg,
+                                                 "downlink_capacity", 0.0),
+                       latency_dist=getattr(ccfg, "latency_dist",
+                                            "constant"),
+                       latency_jitter=getattr(ccfg, "latency_jitter",
+                                              0.5),
+                       latency_seed=getattr(ccfg, "latency_seed", 0))

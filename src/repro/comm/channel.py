@@ -33,19 +33,28 @@ fp32/static seed regime is untouched):
                      Wc collect), so the atomic Eq.-1 time gains
                      ``4 * latency``; the phase pipeline charges two
                      latencies to the upload phase and two to the
-                     download phase.
+                     download phase. With a non-constant
+                     ``latency_dist`` each device-round draws its own
+                     latency around this mean (``links.LatencySampler``,
+                     deterministic per (seed, device, round) — the
+                     driver advances ``sim_round``).
 ``uplink_capacity``  the Main Server's shared ingress in Table-1
                      elements/s (0 = uncontended). Only the phase-level
                      pipeline can observe overlap, so contention prices
                      only pipelined timelines — see
-                     ``links.shared_link_finish_times``.
+                     ``links.shared_link_finish_times`` /
+                     ``links.FluidLink``.
+``downlink_capacity`` the Main Server's shared egress (elements/s, 0 =
+                     uncontended): concurrent dfx downloads in the
+                     pipeline contend for it with the same max-min fair
+                     fluid schedule as the uplink.
 """
 from __future__ import annotations
 
 import copy
 
 from repro.comm.codecs import Codec, get_codec
-from repro.comm.links import StaticLink
+from repro.comm.links import LatencySampler, StaticLink
 
 AUX_BYTES = 4.0          # the scalar aux-loss rider on each feature msg
 MESSAGES_PER_ROUND = 4   # dispatch, features up, grads down, collect
@@ -55,7 +64,10 @@ class CommChannel:
     def __init__(self, codec="fp32", grad_codec=None, link=None, *,
                  dispatch_codec="fp32", error_feedback: bool = False,
                  topk_frac: float = None,
-                 latency: float = 0.0, uplink_capacity: float = 0.0):
+                 latency: float = 0.0, uplink_capacity: float = 0.0,
+                 downlink_capacity: float = 0.0,
+                 latency_dist: str = "constant",
+                 latency_jitter: float = 0.5, latency_seed: int = 0):
         def _codec(c, role):
             if not isinstance(c, Codec):
                 c = get_codec(c, topk_frac=topk_frac)
@@ -88,8 +100,16 @@ class CommChannel:
             raise ValueError(
                 f"uplink_capacity must be >= 0 (0 = uncontended): "
                 f"{uplink_capacity}")
+        if downlink_capacity < 0:
+            raise ValueError(
+                f"downlink_capacity must be >= 0 (0 = uncontended): "
+                f"{downlink_capacity}")
         self.latency = float(latency)
+        self.latency_sampler = LatencySampler(
+            latency, latency_dist, latency_jitter, latency_seed)
+        self.sim_round = 0           # advanced by the RoundDriver
         self.uplink_capacity = float(uplink_capacity)
+        self.downlink_capacity = float(downlink_capacity)
         self.up_bytes = 0.0          # device -> server (features)
         self.down_bytes = 0.0        # server -> device (dfx)
         self.disp_up_bytes = 0.0     # device -> server (Wc/update collect)
@@ -266,6 +286,13 @@ class CommChannel:
         through the dispatch codec)."""
         return 2.0 * self.estimate_dispatch_leg(wc_size)
 
+    def latency_of(self, cid) -> float:
+        """This device-round's per-message latency: the constant knob
+        unless a distribution is configured, in which case the draw is
+        seeded by (latency_seed, cid, sim_round) — deterministic under
+        replay, identical across re-pricings of the same round."""
+        return self.latency_sampler.sample(cid, self.sim_round)
+
     def analytic_round_time(self, dev, *, wc_size: float, n_values: float,
                             fc: float, fs: float, t: float):
         """Eq.-1 device-round (time, bytes) from analytic payloads: the
@@ -277,7 +304,7 @@ class CommChannel:
             + self.estimate_round_payload(n_values)
         t_round = device_round_time_bytes(dev, comm_bytes=nbytes, fc=fc,
                                           fs=fs, rate=self.rate(dev, t)) \
-            + MESSAGES_PER_ROUND * self.latency
+            + MESSAGES_PER_ROUND * self.latency_of(dev.cid)
         return t_round, nbytes
 
     def rate(self, dev, t: float) -> float:

@@ -22,12 +22,22 @@ with each transfer also capped by its device's own link rate. It is a
 fluid (processor-sharing) simulation: whenever a transfer starts or
 finishes the fair shares are recomputed, so an upload that overlaps many
 others is stretched exactly by the observed congestion.
+
+``FluidLink`` wraps the same fluid schedule in a *stateful* per-link
+object that carries in-flight flows ACROSS dispatch cohorts: every flow
+ever submitted stays in the system and each ``solve()`` re-runs the
+max-min fair schedule over all of them, so a straggler's transfer from
+an earlier aggregation window contends with (and is slowed by) the next
+window's cohort. ``LatencySampler`` draws per-(device, round) message
+latencies from a configurable mean-preserving distribution with a
+deterministic seed per draw.
 """
 from __future__ import annotations
 
 import bisect
 import json
 import math
+import zlib
 
 import numpy as np
 
@@ -164,19 +174,26 @@ def _maxmin_rates(active, caps, capacity):
     return rates
 
 
-def shared_link_finish_times(jobs, capacity=math.inf):
-    """Finish times of transfer jobs on a shared link (fluid max-min
-    fair processor sharing).
+def fluid_schedule(jobs, capacity=math.inf, until=None):
+    """Fluid max-min fair processor-sharing schedule of transfer jobs on
+    one shared link.
 
     jobs: sequence of ``(arrival_s, size_bytes, own_rate_bytes_per_s)``;
     capacity: the link's total bytes/s (``math.inf`` = uncontended, each
-    job runs at its own rate). Returns finish times in job order. With
-    infinite capacity this degenerates exactly to
-    ``arrival + size / own_rate``.
+    job runs at its own rate). Returns ``(finish, remaining)`` in job
+    order: with ``until=None`` the schedule runs to completion
+    (``remaining`` all zero); with a finite ``until`` the simulation is
+    right-censored there — unfinished jobs report ``math.inf`` and their
+    bytes still in flight at ``until`` (the cross-window byte-
+    conservation quantity the property suite checks).
+
+    With infinite capacity jobs never interact and the schedule is the
+    closed form ``arrival + size / own_rate`` — bit-exact with the
+    uncontended seed path.
     """
     n = len(jobs)
     if n == 0:
-        return []
+        return [], []
     if capacity <= 0:
         raise ValueError(f"shared link capacity must be > 0: {capacity}")
     arrive = [float(a) for a, _, _ in jobs]
@@ -184,33 +201,254 @@ def shared_link_finish_times(jobs, capacity=math.inf):
     caps = [float(r) for _, _, r in jobs]
     if any(r <= 0 for r in caps):
         raise ValueError(f"job rate caps must be > 0: {caps}")
+    if math.isinf(capacity):
+        finish = [a + b / r for a, b, r in zip(arrive, left, caps)]
+        if until is None:
+            return finish, [0.0] * n
+        rem = [b if a >= until else max(0.0, b - r * (until - a))
+               for a, b, r in zip(arrive, left, caps)]
+        return [f if f <= until else math.inf for f in finish], rem
     finish = [0.0] * n
     done_eps = [max(1e-9, 1e-12 * b) for b in left]
     todo = set(range(n))
     for i in list(todo):               # zero-byte jobs land on arrival
         if left[i] <= done_eps[i]:
             finish[i] = arrive[i]
+            left[i] = 0.0
             todo.discard(i)
-    if not todo:
-        return finish
-    t = min(arrive[i] for i in todo)
-    while todo:
-        active = [i for i in todo if arrive[i] <= t]
-        if not active:
-            t = min(arrive[i] for i in todo)
-            continue
-        rates = _maxmin_rates(active, caps, capacity)
-        t_fin = min(t + left[i] / rates[i] for i in active)
-        future = [arrive[i] for i in todo if arrive[i] > t]
-        t_next = min([t_fin] + ([min(future)] if future else []))
-        for i in active:
-            left[i] -= rates[i] * (t_next - t)
-        t = t_next
-        for i in active:
-            if left[i] <= done_eps[i]:
+    if todo:
+        t = min(arrive[i] for i in todo)
+        while todo and not (until is not None and t >= until):
+            active = [i for i in todo if arrive[i] <= t]
+            if not active:
+                t = min(arrive[i] for i in todo)
+                continue
+            rates = _maxmin_rates(active, caps, capacity)
+            t_fin = min(t + left[i] / rates[i] for i in active)
+            future = [arrive[i] for i in todo if arrive[i] > t]
+            t_next = min([t_fin] + ([min(future)] if future else [])
+                         + ([until] if until is not None else []))
+            if t_next <= t:
+                # FP-resolution guard: the nearest event is closer than
+                # the clock's representable step at t (a carried flow's
+                # tail can be sub-ulp once t is large), so time cannot
+                # advance — the nearest job is done for all practical
+                # purposes; land it at t to guarantee progress.
+                i = min(active, key=lambda j: left[j] / rates[j])
                 finish[i] = t
+                left[i] = 0.0
                 todo.discard(i)
-    return finish
+                continue
+            for i in active:
+                left[i] -= rates[i] * (t_next - t)
+            t = t_next
+            for i in active:
+                if left[i] <= done_eps[i]:
+                    finish[i] = t
+                    left[i] = 0.0
+                    todo.discard(i)
+    for i in todo:                     # right-censored at ``until``
+        finish[i] = math.inf
+    return finish, left
+
+
+def shared_link_finish_times(jobs, capacity=math.inf):
+    """Finish times of transfer jobs on a shared link (fluid max-min
+    fair processor sharing) — the one-cohort view of ``fluid_schedule``.
+    With infinite capacity this degenerates exactly to
+    ``arrival + size / own_rate``."""
+    return fluid_schedule(jobs, capacity)[0]
+
+
+def retire_prefix(live, finishes, arrivals, now):
+    """The shared retirement rule of the stateful resources
+    (``FluidLink`` / the driver's server queue): among the ``live``
+    ids, find the longest finish-sorted prefix whose finishes ALL
+    predate both ``now`` (no future submission arrives earlier — the
+    driver dispatches at arrivals >= its clock) and every kept id's
+    arrival. Such a prefix can never have overlapped anything still
+    schedulable, so dropping it leaves every kept schedule
+    bit-identical. Returns (retired ids, kept ids). Under sustained
+    overlap with no quiet point nothing retires — correctly, since
+    everything still interacts through the shared resource."""
+    order = sorted(live, key=lambda i: finishes[i])
+    n = len(order)
+    suffix_min = [math.inf] * (n + 1)
+    for i in range(n - 1, -1, -1):
+        suffix_min[i] = min(suffix_min[i + 1], arrivals[order[i]])
+    cut = 0
+    for i, f in enumerate(order):
+        if finishes[f] > now:
+            break
+        if finishes[f] <= suffix_min[i + 1]:
+            cut = i + 1
+    return order[:cut], order[cut:]
+
+
+class FluidLink:
+    """A shared link that carries in-flight flows across dispatch
+    cohorts (aggregation windows).
+
+    Unlike a one-shot ``shared_link_finish_times`` call — which solves
+    each cohort in isolation, so a straggler's transfer from an earlier
+    window never slows the next window's — a ``FluidLink`` accumulates
+    the flows submitted to it and ``solve()`` re-runs the max-min fair
+    fluid schedule over all of them. Finish times of still-in-flight
+    flows therefore shift *later* (never earlier: extra demand cannot
+    speed anyone up) as new cohorts arrive, and the driver reconciles
+    its pending events against the re-solve each round. Flows whose
+    finish predates every later arrival recompute to bit-identical
+    values, which is what keeps already-closed windows consistent — and
+    is also what lets ``compact()`` retire them outright (finishes
+    served from a cache afterwards), so the per-round re-solve cost is
+    bounded by the flows still interacting rather than the full
+    history.
+
+    Flow arrivals may be revised via ``set_arrival`` while a flow is
+    still pending (the pipelined driver does this for downlink flows,
+    whose arrival is the commit event of a server-compute job that a
+    re-solve may shift).
+    """
+
+    def __init__(self, capacity: float = math.inf):
+        if capacity <= 0:
+            raise ValueError(f"link capacity must be > 0: {capacity}")
+        self.capacity = float(capacity)
+        self._arrive: list = []
+        self._bytes: list = []
+        self._caps: list = []
+        self._live: list = []          # fids still in the schedule
+        self._finish_cache: dict = {}  # retired fid -> finish
+
+    def __len__(self):
+        return len(self._arrive)
+
+    @property
+    def contended(self) -> bool:
+        return not math.isinf(self.capacity)
+
+    @property
+    def submitted_bytes(self) -> float:
+        return sum(self._bytes)
+
+    def submit(self, arrival: float, nbytes: float, rate: float) -> int:
+        """Register a flow; returns its id (index into solve() output)."""
+        if rate <= 0:
+            raise ValueError(f"flow rate must be > 0: {rate}")
+        self._arrive.append(float(arrival))
+        self._bytes.append(float(nbytes))
+        self._caps.append(float(rate))
+        self._live.append(len(self._arrive) - 1)
+        return len(self._arrive) - 1
+
+    def set_arrival(self, fid: int, arrival: float):
+        self._arrive[fid] = float(arrival)
+
+    def solve(self):
+        """Finish times of ALL flows (retired ones from the cache),
+        assuming no future arrivals."""
+        fins = [0.0] * len(self._arrive)
+        for f, fin in self._finish_cache.items():
+            fins[f] = fin
+        jobs = [(self._arrive[f], self._bytes[f], self._caps[f])
+                for f in self._live]
+        for f, fin in zip(self._live,
+                          fluid_schedule(jobs, self.capacity)[0]):
+            fins[f] = fin
+        return fins
+
+    def remaining_at(self, t: float):
+        """Per-flow bytes still in flight at time ``t`` (a flow that has
+        not arrived yet reports its full size; a retired flow reports
+        0.0, so after ``compact(now)`` this is exact for t >= now).
+        Conservation — ``submitted_bytes == drained +
+        sum(remaining_at(t))`` with the drain rate never exceeding the
+        capacity — is property-tested in
+        tests/test_driver_properties.py."""
+        rem = [0.0] * len(self._arrive)
+        jobs = [(self._arrive[f], self._bytes[f], self._caps[f])
+                for f in self._live]
+        for f, r in zip(self._live,
+                        fluid_schedule(jobs, self.capacity, until=t)[1]):
+            rem[f] = r
+        return rem
+
+    def compact(self, now: float):
+        """Retire flows that can no longer influence any current or
+        future schedule (see ``retire_prefix``); their finishes move to
+        a cache that ``solve()`` keeps serving."""
+        if len(self._live) <= 1:
+            return
+        fins = self.solve()
+        retired, kept = retire_prefix(self._live, fins, self._arrive, now)
+        if retired:
+            for f in retired:
+                self._finish_cache[f] = fins[f]
+            self._live = kept
+
+
+# ---------------------------------------------------------------------------
+# per-(device, round) latency draws
+# ---------------------------------------------------------------------------
+LATENCY_DISTS = ("constant", "uniform", "lognormal", "exp")
+
+
+def _seed_int(cid) -> int:
+    try:
+        return int(cid)
+    except (TypeError, ValueError):
+        # stable across interpreter runs (built-in hash() is salted by
+        # PYTHONHASHSEED and would break the replay guarantee)
+        return zlib.crc32(str(cid).encode("utf-8"))
+
+
+class LatencySampler:
+    """Per-(device, round) message-latency draws.
+
+    Every distribution is mean-preserving around ``base`` (turning a
+    distribution on changes the spread of transport delay, not its
+    average), and every draw is seeded by the ``(seed, cid, round)``
+    triple — a fixed-seed replay reproduces each device-round's latency
+    exactly, regardless of dispatch order or how many times the cost
+    model re-prices the round.
+
+      constant   always ``base`` (the seed regime — no RNG touched)
+      uniform    base · U[1 − jitter, 1 + jitter]
+      lognormal  base · exp(jitter · N(0,1) − jitter²/2)
+      exp        base · Exp(1)  (jitter ignored)
+    """
+
+    def __init__(self, base: float = 0.0, dist: str = "constant",
+                 jitter: float = 0.5, seed: int = 0):
+        if dist not in LATENCY_DISTS:
+            raise ValueError(f"unknown latency distribution {dist!r}; "
+                             f"known: {LATENCY_DISTS}")
+        if base < 0:
+            raise ValueError(f"latency must be >= 0: {base}")
+        if not 0.0 <= jitter <= 1.0:
+            raise ValueError(f"latency jitter must be in [0, 1]: {jitter}")
+        self.base = float(base)
+        self.dist = dist
+        self.jitter = float(jitter)
+        self.seed = int(seed)
+
+    @property
+    def mean(self) -> float:
+        return self.base
+
+    def sample(self, cid, rnd: int = 0) -> float:
+        if self.dist == "constant" or self.base == 0.0:
+            return self.base
+        rng = np.random.default_rng(
+            (self.seed, _seed_int(cid), int(rnd)))
+        if self.dist == "uniform":
+            j = self.jitter
+            return self.base * (1.0 - j + 2.0 * j * float(rng.random()))
+        if self.dist == "lognormal":
+            s = self.jitter
+            return self.base * math.exp(
+                s * float(rng.standard_normal()) - 0.5 * s * s)
+        return self.base * float(rng.exponential(1.0))
 
 
 def get_link(name: str = "static", **kw):

@@ -147,10 +147,16 @@ class CommConfig:
     'topk'/'randk' sparsifiers. ``link`` selects the rate model:
     'static' (Table 1) or 'trace' (time-varying multiplier schedule —
     inline via trace_* fields or a JSON file, see comm/README.md).
-    ``latency`` adds a fixed per-message delay (four messages per
-    device-round); ``uplink_capacity`` bounds the Main Server's shared
-    ingress (Table-1 elements/s, 0 = uncontended) — concurrent uploads
-    in the phase pipeline then contend for it."""
+    ``latency`` adds a per-message delay (four messages per
+    device-round); with a non-constant ``latency_dist`` each
+    device-round draws its own latency around that mean (uniform /
+    lognormal / exp, spread ``latency_jitter``, deterministic per
+    (latency_seed, device, round)). ``uplink_capacity`` bounds the Main
+    Server's shared ingress and ``downlink_capacity`` its shared egress
+    (Table-1 elements/s, 0 = uncontended) — concurrent uploads and
+    dfx downloads in the phase pipeline then contend for them under the
+    same max-min fair fluid schedule, with in-flight flows carried
+    across aggregation windows."""
 
     codec: str = "fp32"                 # fp32|bf16|fp16|int8|topk|randk
     grad_codec: str = ""                # '' -> follow codec
@@ -165,8 +171,12 @@ class CommConfig:
     trace_period: float = 0.0           # 0 -> trace_times[-1]
     trace_phase_per_device: bool = True
     trace_file: str = ""                # JSON overrides the inline trace
-    latency: float = 0.0                # seconds per message
+    latency: float = 0.0                # seconds per message (the mean)
+    latency_dist: str = "constant"      # constant|uniform|lognormal|exp
+    latency_jitter: float = 0.5         # spread of the non-constant dists
+    latency_seed: int = 0               # latency draw stream seed
     uplink_capacity: float = 0.0        # shared elements/s; 0 = off
+    downlink_capacity: float = 0.0      # shared egress; 0 = off
 
 
 @dataclasses.dataclass(frozen=True)
@@ -183,13 +193,20 @@ class DriverConfig:
     ``pipeline`` splits each device-round into upload / server-compute /
     download phase events: a group's update commits when its server
     backward finishes (downloads drain in the background), and
-    concurrent uploads contend for ``CommConfig.uplink_capacity``."""
+    concurrent uploads contend for ``CommConfig.uplink_capacity``.
+    ``server_concurrency`` bounds the Main Server GPU to that many
+    concurrent group backwards (FIFO queue; 0 = unbounded, the
+    free-overlap regime) and ``gate_redispatch`` makes a device wait
+    out its own draining download before it can start the next round's
+    upload — both only observable under ``pipeline``."""
 
     exec_mode: str = "sync"             # sync | semi_async
     staleness_cap: int = 1              # max rounds an update may lag
     quorum: float = 0.5                 # window-close arrival fraction
     predictive: bool = False            # link-aware split forecasts
     pipeline: bool = False              # phase-level event pipeline
+    server_concurrency: int = 0         # server backward slots; 0 = inf
+    gate_redispatch: bool = False       # wait out own draining download
 
 
 def make_reduced(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 256,

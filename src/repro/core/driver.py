@@ -59,6 +59,35 @@ off, every commit can only move earlier, so the pipelined wall-clock is
 a lower bound on the phase-sequential one (property-tested in
 tests/test_driver_properties.py).
 
+Finite resources (all default off — the free-overlap regime — and all
+only observable under the phase pipeline, which is the only timeline
+that can see overlap):
+
+    server_concurrency   the Main Server GPU runs at most this many
+                         group backwards at once (``_ServerQueue``:
+                         FIFO by feature-arrival order; 0 = unbounded);
+    downlink_capacity    concurrent dfx downloads contend for the
+                         shared egress under the same max-min fair
+                         fluid schedule as the uplink (``FluidLink``);
+    cross-window carry   uplink AND downlink flows live in stateful
+                         ``FluidLink``s that span aggregation windows:
+                         a straggler's in-flight transfer slows the
+                         next round's cohort, and each round's re-solve
+                         revises the straggler's own pending events
+                         (already-closed windows can never be
+                         disturbed — their inputs all predate every
+                         later arrival);
+    gate_redispatch      a device must finish draining its own download
+                         before its next upload may start (off = the
+                         semi-async queue's device-overcommit optimism);
+    latency_dist         per-(device, round) latency draws around the
+                         mean instead of one shared constant
+                         (``links.LatencySampler``, deterministic seed
+                         per draw — semi-async replay is exact).
+
+With every knob at its default the event timeline is bit-exact with the
+infinite-resource pipeline (closed-form fast paths, golden-tested).
+
 Predictive split selection: with ``predictive=True`` the driver installs
 a ``forecast`` hook on the scheduler — instead of trusting the EMA time
 table alone, each candidate time is re-priced with the link model's
@@ -79,7 +108,7 @@ import math
 from typing import Callable, Optional
 
 from repro.comm.channel import MESSAGES_PER_ROUND
-from repro.comm.links import shared_link_finish_times
+from repro.comm.links import FluidLink
 from repro.core.simulation import (BYTES_PER_ELEM, CLIENT_FWD_FRAC,
                                    SERVER_FLOPS, device_round_time_bytes,
                                    fedavg_round_comm_bytes,
@@ -102,16 +131,33 @@ class PhaseCost:
     """One device-round decomposed for the pipelined timeline.
 
     Transfer rates are frozen at the dispatch clock (piecewise-constant
-    traces make this exact within a segment); the feature upload is the
-    only segment that contends for the shared ingress, so it is kept as
-    (bytes, own-rate) for the fluid scheduler while everything else is
-    already seconds."""
+    traces make this exact within a segment). The feature upload and
+    the dfx download are the segments that contend for the shared
+    ingress/egress, so each is kept as (bytes, own-rate) for the fluid
+    scheduler; everything else is already seconds. ``t_down`` remains
+    the FULL download-phase duration on an uncontended egress (the
+    legacy lump, kept verbatim so the default path stays bit-exact);
+    ``down_bytes``/``down_rate``/``t_post`` carve the contendable dfx
+    transfer out of it for a finite ``downlink_capacity`` (``t_post``:
+    the remainder — client backward + Wc collect + latency — that runs
+    after the contended transfer lands; None derives it from
+    ``t_down``)."""
     t_pre: float           # Wc dispatch transfer + client fwd (+ 2 lat)
     up_bytes: float        # feature payload on the shared uplink
     up_rate: float         # device's own uplink bytes/s at dispatch
     t_srv: float           # server compute (the commit phase)
     t_down: float          # dfx down + client bwd + Wc collect (+ 2 lat)
     total_bytes: float     # full wire traffic (= the atomic accounting)
+    down_bytes: float = 0.0        # dfx payload on the shared downlink
+    down_rate: float = math.inf    # device's own downlink bytes/s
+    t_post: float = None           # post-transfer remainder of t_down
+
+    def post_time(self) -> float:
+        """Download-phase time after the contended dfx transfer."""
+        if self.t_post is not None:
+            return self.t_post
+        xfer = self.down_bytes / self.down_rate if self.down_bytes else 0.0
+        return self.t_down - xfer
 
 
 class CostModel:
@@ -140,6 +186,10 @@ class CostModel:
 
     def shared_uplink_bytes(self) -> float:
         """Shared ingress capacity in bytes/s (inf = uncontended)."""
+        return math.inf
+
+    def shared_downlink_bytes(self) -> float:
+        """Shared egress capacity in bytes/s (inf = uncontended)."""
         return math.inf
 
     def forecast_time(self, dev, split: int, clock: float,
@@ -199,7 +249,10 @@ class AnalyticCost(CostModel):
         fc, fs = p * c["fc"], p * c["fs"]
         # half the round's messages ride each client-side phase, so the
         # atomic and phase paths charge the same total latency
-        lat2 = 0.5 * MESSAGES_PER_ROUND * ch.latency
+        lat2 = 0.5 * MESSAGES_PER_ROUND * ch.latency_of(_cid(dev))
+        # t_down keeps the legacy lump arithmetic verbatim (bit-exact
+        # default path); t_post carves the dfx transfer out for a
+        # contended egress
         return PhaseCost(
             t_pre=lat2 + wc_down / rate
             + CLIENT_FWD_FRAC * fc / dev.comp,
@@ -207,10 +260,17 @@ class AnalyticCost(CostModel):
             t_srv=fs / SERVER_FLOPS,
             t_down=lat2 + (down + wc_up) / rate
             + (1.0 - CLIENT_FWD_FRAC) * fc / dev.comp,
-            total_bytes=wc_down + wc_up + up + down)
+            total_bytes=wc_down + wc_up + up + down,
+            down_bytes=down, down_rate=rate,
+            t_post=lat2 + wc_up / rate
+            + (1.0 - CLIENT_FWD_FRAC) * fc / dev.comp)
 
     def shared_uplink_bytes(self):
         cap = getattr(self.channel, "uplink_capacity", 0.0)
+        return cap * BYTES_PER_ELEM if cap else math.inf
+
+    def shared_downlink_bytes(self):
+        cap = getattr(self.channel, "downlink_capacity", 0.0)
         return cap * BYTES_PER_ELEM if cap else math.inf
 
     def forecast_time(self, dev, split, clock, horizon, load=1):
@@ -226,6 +286,8 @@ class AnalyticCost(CostModel):
             # (even a solo upload is capped at the full ingress, exactly
             # as the fluid schedule caps it)
             rate = min(rate, cap / max(load, 1))
+        # forecasts price the MEAN latency (the draw for a future round
+        # is unknown; every distribution is mean-preserving)
         return device_round_time_bytes(dev, comm_bytes=nbytes,
                                        fc=p * c["fc"], fs=p * c["fs"],
                                        rate=rate) \
@@ -249,7 +311,7 @@ class MeteredCost(AnalyticCost):
         t = device_round_time_bytes(
             dev, comm_bytes=nbytes, fc=p * c["fc"], fs=p * c["fs"],
             rate=self.channel.rate(dev, clock)) \
-            + MESSAGES_PER_ROUND * self.channel.latency
+            + MESSAGES_PER_ROUND * self.channel.latency_of(_cid(dev))
         return t, nbytes
 
 
@@ -350,6 +412,87 @@ class _Event:
     key: object = dataclasses.field(compare=False)
 
 
+class _ServerQueue:
+    """The Main Server GPU as a finite resource: at most ``slots``
+    group backwards run concurrently, FIFO by feature-arrival time
+    (ties broken by admission order). Live jobs are re-scheduled from
+    scratch by every ``solve()`` — which makes the cross-window
+    consistency argument simple: a schedule whose arrivals did not
+    change recomputes to the bit-identical finishes, while pending
+    jobs whose uplink flows were slowed by a later cohort shift (and
+    may reorder) behind it. ``compact()`` retires jobs that can no
+    longer interact with anything schedulable (same prefix rule as
+    ``FluidLink``: all slots they occupied are free before every kept
+    job's arrival), bounding the per-round cost by the jobs still in
+    flight."""
+
+    def __init__(self, slots: float = math.inf):
+        if slots != math.inf and slots < 1:
+            raise ValueError(f"server slots must be >= 1 (or inf): {slots}")
+        self.slots = slots
+        self._arrive: list = []
+        self._dur: list = []
+        self._live: list = []          # jids still in the schedule
+        self._finish_cache: dict = {}  # retired jid -> finish
+
+    def add(self, arrival: float, duration: float) -> int:
+        self._arrive.append(float(arrival))
+        self._dur.append(float(duration))
+        self._live.append(len(self._arrive) - 1)
+        return len(self._arrive) - 1
+
+    def set_arrival(self, jid: int, arrival: float):
+        self._arrive[jid] = float(arrival)
+
+    def solve(self):
+        """Finish time per job (index = jid; retired jobs from cache)."""
+        finish = [0.0] * len(self._arrive)
+        for j, fin in self._finish_cache.items():
+            finish[j] = fin
+        if math.isinf(self.slots):
+            for i in self._live:
+                finish[i] = self._arrive[i] + self._dur[i]
+            return finish
+        order = sorted(self._live, key=lambda i: (self._arrive[i], i))
+        free = [0.0] * int(self.slots)   # slot free times (min-heap)
+        for i in order:
+            start = max(self._arrive[i], heapq.heappop(free))
+            finish[i] = start + self._dur[i]
+            heapq.heappush(free, finish[i])
+        return finish
+
+    def compact(self, now: float):
+        from repro.comm.links import retire_prefix
+        if len(self._live) <= 1:
+            return
+        fins = self.solve()
+        retired, kept = retire_prefix(self._live, fins, self._arrive, now)
+        if retired:
+            for j in retired:
+                self._finish_cache[j] = fins[j]
+            self._live = kept
+
+
+@dataclasses.dataclass
+class _Flight:
+    """One pipelined device-round in flight: its uplink flow, server
+    job and (when the egress is contended) downlink flow ids, plus the
+    latest solved commit / download-end estimates. Flights persist
+    across rounds until their commit event has been popped AND their
+    download has drained, so each round's resource re-solve can push a
+    straggler's pending events later."""
+    uid: int
+    cid: object
+    round: int
+    fid: int                   # uplink FluidLink flow id
+    jid: int                   # _ServerQueue job id
+    pc: PhaseCost
+    did: Optional[int] = None  # downlink flow id (contended egress only)
+    key: object = None         # commit work-item (group) key
+    commit: float = math.nan
+    dl_end: float = math.nan
+
+
 class RoundDriver:
     """Owns the round loop and the simulated timeline.
 
@@ -361,18 +504,28 @@ class RoundDriver:
                 devices — the engine restricts to devices that own data)
     pipeline  : phase-level event timeline (upload / server-compute /
                 download) instead of one atomic event per device-round
+    server_concurrency : max concurrent group backwards on the Main
+                Server GPU (0 = unbounded; pipeline only)
+    gate_redispatch : a device's next upload waits out its own draining
+                download (off = device-overcommit optimism; pipeline
+                only)
     """
 
     def __init__(self, scheduler, cost: CostModel, devices, *,
                  mode: str = "sync", staleness_cap: int = 1,
                  quorum: float = 0.5, predictive: bool = False,
-                 pipeline: bool = False, warmup_devices=None):
+                 pipeline: bool = False, warmup_devices=None,
+                 server_concurrency: int = 0,
+                 gate_redispatch: bool = False):
         if mode not in EXEC_MODES:
             raise ValueError(f"exec mode {mode!r}; known: {EXEC_MODES}")
         if staleness_cap < 0:
             raise ValueError(f"staleness_cap must be >= 0: {staleness_cap}")
         if not 0.0 < quorum <= 1.0:
             raise ValueError(f"quorum must be in (0, 1]: {quorum}")
+        if server_concurrency < 0:
+            raise ValueError(f"server_concurrency must be >= 0 "
+                             f"(0 = unbounded): {server_concurrency}")
         self.scheduler = scheduler
         self.cost = cost
         self.devices = list(devices)
@@ -384,13 +537,24 @@ class RoundDriver:
         self.staleness_cap = staleness_cap
         self.quorum = quorum
         self.pipeline = bool(pipeline)
+        self.server_concurrency = int(server_concurrency)
+        self.gate_redispatch = bool(gate_redispatch)
         self.clock = 0.0
         self.comm = 0.0                 # accumulated wire bytes
         self.round = 0
         self._pending: list = []        # _Event heap (commit events)
-        self._downloads: list = []      # (ready, seq, cid) heap (pipeline)
+        self._downloads: list = []      # (ready, uid) heap (pipeline)
         self._seq = 0
         self._load = 1                  # current round's cohort size
+        # pipeline resource state (built lazily on the first pipelined
+        # round so the cost model's capacities are settled)
+        self._uplink: Optional[FluidLink] = None
+        self._downlink: Optional[FluidLink] = None
+        self._srvq: Optional[_ServerQueue] = None
+        self._flights: dict = {}        # uid -> _Flight (live)
+        self._next_uid = 0
+        self._dev_busy: dict = {}       # cid -> latest own download end
+        self._round_uids: dict = {}     # this round's cid -> flight uid
         if predictive:
             if not hasattr(scheduler, "forecast"):
                 raise ValueError(
@@ -427,6 +591,10 @@ class RoundDriver:
         part_set = set(part)
         clock0 = self.clock
         self._load = max(1, len(part))
+        # per-(device, round) latency draws key on the round index
+        ch = getattr(self.cost, "channel", None)
+        if ch is not None:
+            ch.sim_round = self.round
 
         # §3.1 warm-up: the shared split is dispatched to ALL devices so
         # the whole client time table fills; participants are observed
@@ -476,6 +644,14 @@ class RoundDriver:
 
         items = {key: max(commits[c] for c in members)
                  for key, members in groups.items() if members}
+        if self.pipeline and self._round_uids:
+            # commit-granularity backref: carried flights re-key their
+            # group's pending event on later rounds' resource re-solves
+            for key, members in groups.items():
+                for c in members:
+                    uid = self._round_uids.get(c)
+                    if uid is not None:
+                        self._flights[uid].key = key
         committed, staleness, new_clock = self._close_window(items, clock0)
         self._drain_downloads(new_clock)
 
@@ -489,21 +665,51 @@ class RoundDriver:
             pending=len(self._pending), phases=phases,
             downloads=len(self._downloads))
         self.round += 1
+        self._prune_flights()
         return rec
 
     # --------------------------------------------------- phase pipeline
     def _phase_schedule(self, part, splits, payloads, pay_up, pay_down,
                         disp_down, disp_up, clock0):
-        """Chain upload → server-compute → download events per device.
-        Returns ({cid: commit time}, {cid: full round duration},
-        round wire bytes, {cid: phase durations}).
+        """Chain upload → server-compute → download through the shared
+        finite resources. Returns ({cid: commit time}, {cid: full round
+        duration}, round wire bytes, {cid: phase durations}).
 
-        Commit = end of the device's server-compute share (its own
-        Eq.-1 Fs term chained on its own upload — the server starts
-        folding a member's contribution in as soon as it arrives, which
-        is exactly the upload/backward overlap the pipeline buys).
-        Downloads drain in the background: they gate ``flush()`` and the
-        honest final wall-clock, not the aggregation windows."""
+        Commit = the end of the device's server-compute share — its own
+        Eq.-1 Fs term, queued FIFO on the server's `server_concurrency`
+        slots (unbounded by default), chained on its own upload through
+        the shared-ingress fluid schedule. Downloads cross the shared
+        egress and drain in the background: they gate ``flush()``, the
+        honest final wall-clock, and (with ``gate_redispatch``) the
+        device's own next dispatch — never the aggregation windows.
+
+        All three resources are STATEFUL across aggregation windows:
+        flows and jobs live until they finish, and each round re-solves
+        over everything still in flight, which both (a) slows this
+        cohort by the straggler transfers it overlaps and (b) revises
+        the stragglers' own pending commit/download events (the re-key
+        step below). Fluid-link finishes only ever move later (extra
+        demand cannot speed a transfer up); a finite-slot server queue
+        can also move a pending commit EARLIER when a delayed upload
+        vacates its FIFO position — both directions are corrections of
+        an optimistic pending estimate, never of history: an event that
+        already closed a window had every input in the past of every
+        later arrival, so no re-solve can disturb the committed
+        timeline, and a pending event revised below the current clock
+        simply commits in the next window (the staleness forcing still
+        bounds its lag)."""
+        if self._uplink is None:
+            self._uplink = FluidLink(self.cost.shared_uplink_bytes())
+            self._downlink = FluidLink(self.cost.shared_downlink_bytes())
+            self._srvq = _ServerQueue(self.server_concurrency or math.inf)
+        else:
+            # retire finished history that can no longer interact with
+            # anything schedulable (every new arrival is >= clock0), so
+            # the re-solves below cost O(in-flight), not O(all rounds)
+            self._uplink.compact(clock0)
+            self._downlink.compact(clock0)
+            self._srvq.compact(clock0)
+
         quants = {}
         for c in part:
             dev = self._dev_by_id.get(c, c)
@@ -512,16 +718,8 @@ class RoundDriver:
                 down_payload=pay_down.get(c),
                 disp_down=disp_down.get(c), disp_up=disp_up.get(c))
 
-        jobs, order = [], []
-        for c, pc in quants.items():
-            if pc is not None:
-                jobs.append((clock0 + pc.t_pre, pc.up_bytes, pc.up_rate))
-                order.append(c)
-        fins = shared_link_finish_times(jobs,
-                                        self.cost.shared_uplink_bytes())
-        up_end = dict(zip(order, fins))
-
         commits, times, phases, comm = {}, {}, {}, 0.0
+        self._round_uids = {}
         for c, pc in quants.items():
             if pc is None:             # no decomposition: atomic event
                 dev = self._dev_by_id.get(c, c)
@@ -534,20 +732,103 @@ class RoundDriver:
                 times[c] = t
                 comm += nbytes
                 continue
-            commit = up_end[c] + pc.t_srv
-            dl_end = commit + pc.t_down
-            commits[c] = commit
-            times[c] = dl_end - clock0
+            start = clock0
+            if self.gate_redispatch:
+                start = max(start, self._dev_busy.get(c, 0.0))
+            fid = self._uplink.submit(start + pc.t_pre, pc.up_bytes,
+                                      pc.up_rate)
+            jid = self._srvq.add(math.inf, pc.t_srv)
+            fl = _Flight(uid=self._next_uid, cid=c, round=self.round,
+                         fid=fid, jid=jid, pc=pc)
+            self._next_uid += 1
+            self._flights[fl.uid] = fl
+            self._round_uids[c] = fl.uid
             comm += pc.total_bytes
-            phases[c] = {"up": up_end[c] - clock0, "srv": pc.t_srv,
-                         "down": pc.t_down}
-            heapq.heappush(self._downloads, (dl_end, self._seq, c))
-            self._seq += 1
+
+        # one re-solve over everything still in flight: ingress fluid
+        # schedule → server FIFO queue → egress fluid schedule
+        up_fin = self._uplink.solve()
+        for fl in self._flights.values():
+            self._srvq.set_arrival(fl.jid, up_fin[fl.fid])
+        srv_fin = self._srvq.solve()
+        for fl in self._flights.values():
+            fl.commit = srv_fin[fl.jid]
+            if self._downlink.contended and fl.pc.down_bytes:
+                if fl.did is None:
+                    fl.did = self._downlink.submit(
+                        fl.commit, fl.pc.down_bytes, fl.pc.down_rate)
+                else:
+                    self._downlink.set_arrival(fl.did, fl.commit)
+        dn_fin = self._downlink.solve() if self._downlink.contended \
+            else None
+        for fl in self._flights.values():
+            if fl.did is not None:
+                fl.dl_end = dn_fin[fl.did] + fl.pc.post_time()
+            else:
+                # uncontended egress: the legacy closed form, bit-exact
+                fl.dl_end = fl.commit + fl.pc.t_down
+            busy = self._dev_busy.get(fl.cid, 0.0)
+            self._dev_busy[fl.cid] = max(busy, fl.dl_end)
+
+        # carried flights: the re-solve may have revised a straggler's
+        # commit — re-key its pending event. Keyed by (dispatch round,
+        # work key): the default standalone work keys are bare device
+        # cids, which REPEAT when a device is re-dispatched while its
+        # old event still pends, and the two dispatches must not feed
+        # each other's ready times.
+        if self._pending:
+            by_key: dict = {}
+            for fl in self._flights.values():
+                if fl.key is not None:
+                    by_key.setdefault((fl.round, fl.key), []).append(fl)
+            moved = False
+            for e in self._pending:
+                fls = by_key.get((e.round, e.key))
+                if fls:
+                    ready = max(fl.commit for fl in fls)
+                    if ready != e.ready:
+                        e.ready = ready
+                        moved = True
+            if moved:
+                heapq.heapify(self._pending)
+
+        # this cohort's view: the scheduler observes times, the history
+        # carries the phase split
+        for c, uid in self._round_uids.items():
+            fl = self._flights[uid]
+            commits[c] = fl.commit
+            times[c] = fl.dl_end - clock0
+            phases[c] = {"up": up_fin[fl.fid] - clock0,
+                         "srv": fl.commit - up_fin[fl.fid],
+                         "down": fl.dl_end - fl.commit}
+
+        # the download heap mirrors the latest estimate for every live
+        # flight (every one ends after this round's dispatch clock —
+        # drained flights were pruned when their window closed)
+        self._downloads = [(fl.dl_end, fl.uid)
+                           for fl in self._flights.values()]
+        heapq.heapify(self._downloads)
         return commits, times, comm, phases
 
     def _drain_downloads(self, horizon):
         while self._downloads and self._downloads[0][0] <= horizon:
             heapq.heappop(self._downloads)
+
+    def _prune_flights(self):
+        """Drop flights whose commit event has been popped AND whose
+        download has drained (their resource jobs stay behind in the
+        links/queue until compaction retires them). Matched by
+        (dispatch round, work key) — a re-dispatched device reuses its
+        bare-cid key, and its drained earlier flight must not be kept
+        alive by the new dispatch's pending event."""
+        if not self._flights:
+            return
+        pending = {(e.round, e.key) for e in self._pending}
+        gone = [u for u, fl in self._flights.items()
+                if (fl.round, fl.key) not in pending
+                and fl.dl_end <= self.clock]
+        for u in gone:
+            del self._flights[u]
 
     # ------------------------------------------------------ event window
     def _push(self, key, ready):
@@ -593,12 +874,13 @@ class RoundDriver:
         download, commits everything. Returns (committed keys, staleness
         dict)."""
         ready = [e.ready for e in self._pending] \
-            + [r for r, _, _ in self._downloads]
+            + [r for r, *_ in self._downloads]
         if not ready:
             return [], {}
         new_clock = max(ready)
         done = self._pop_ready(new_clock)
         self._drain_downloads(new_clock)
         self.clock = max(self.clock, new_clock)
+        self._prune_flights()
         return [e.key for e in done], \
             {e.key: self.round - 1 - e.round for e in done}

@@ -115,6 +115,8 @@ class S2FLEngine:
             self.scheduler, cost, self.devices, mode=dcfg.exec_mode,
             staleness_cap=dcfg.staleness_cap, quorum=dcfg.quorum,
             predictive=dcfg.predictive, pipeline=dcfg.pipeline,
+            server_concurrency=getattr(dcfg, "server_concurrency", 0),
+            gate_redispatch=getattr(dcfg, "gate_redispatch", False),
             warmup_devices=[d for d in self.devices if d.cid in data])
         self._held = {}            # gid -> un-committed round results
         self._next_gid = 0

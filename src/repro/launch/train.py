@@ -85,10 +85,26 @@ def main(argv=None):
     ap.add_argument("--latency", type=float, default=0.0,
                     help="per-message link latency in seconds (four "
                          "messages per device-round)")
+    ap.add_argument("--latency-dist", default="constant",
+                    choices=["constant", "uniform", "lognormal", "exp"],
+                    help="per-(device, round) latency distribution "
+                         "around the --latency mean (deterministic "
+                         "draw per device-round)")
+    ap.add_argument("--latency-jitter", type=float, default=0.5,
+                    help="spread of the non-constant latency "
+                         "distributions (uniform half-width / "
+                         "lognormal sigma, as a fraction of the mean)")
+    ap.add_argument("--latency-seed", type=int, default=0,
+                    help="seed of the latency draw stream")
     ap.add_argument("--contention", type=float, default=0.0,
                     help="shared Main-Server uplink capacity in Table-1 "
                          "elements/s (0 = uncontended); concurrent "
                          "uploads contend for it under --pipeline")
+    ap.add_argument("--downlink-contention", type=float, default=0.0,
+                    help="shared Main-Server downlink (egress) capacity "
+                         "in Table-1 elements/s (0 = uncontended); "
+                         "concurrent dfx downloads contend for it "
+                         "under --pipeline")
     # round loop (repro.core.driver)
     ap.add_argument("--exec-mode", default="sync",
                     choices=["sync", "semi_async"],
@@ -107,6 +123,15 @@ def main(argv=None):
                     help="phase-level event pipeline: upload / server "
                          "compute / download phases overlap across "
                          "devices and groups")
+    ap.add_argument("--server-slots", type=int, default=0,
+                    help="max concurrent group backwards on the Main "
+                         "Server GPU (FIFO queue; 0 = unbounded); only "
+                         "observable under --pipeline")
+    ap.add_argument("--gate-redispatch", action="store_true",
+                    help="a device waits out its own draining download "
+                         "before its next upload may start (off = the "
+                         "semi-async queue's overcommit optimism); "
+                         "only observable under --pipeline")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -124,11 +149,17 @@ def main(argv=None):
                       topk_frac=args.topk_frac,
                       link="trace" if args.link_trace else "static",
                       trace_file=args.link_trace, latency=args.latency,
-                      uplink_capacity=args.contention)
+                      latency_dist=args.latency_dist,
+                      latency_jitter=args.latency_jitter,
+                      latency_seed=args.latency_seed,
+                      uplink_capacity=args.contention,
+                      downlink_capacity=args.downlink_contention)
     dcfg = DriverConfig(exec_mode=args.exec_mode,
                         staleness_cap=args.staleness_cap,
                         quorum=args.quorum, predictive=args.predictive,
-                        pipeline=args.pipeline)
+                        pipeline=args.pipeline,
+                        server_concurrency=args.server_slots,
+                        gate_redispatch=args.gate_redispatch)
     ecfg = EngineConfig(
         mode=args.mode, rounds=args.rounds,
         clients_per_round=args.per_round, batch_size=args.batch_size,

@@ -13,6 +13,10 @@ from repro.models import SplitModel
 from repro.models.frontends import synth_frontend_embeds
 from repro.models.transformer import decode_step, forward, prefill
 
+# training-heavy module: the quick loop skips it (-m "not slow"; see pytest.ini)
+pytestmark = pytest.mark.slow
+
+
 LM_ARCHS = [a for a in list_configs()
             if not hasattr(get_config(a), "family")]
 CNN_ARCHS = [a for a in list_configs() if hasattr(get_config(a), "family")]

@@ -267,6 +267,7 @@ def _engine(codec, plan, fed, model, rounds=3):
     return eng
 
 
+@pytest.mark.slow
 def test_engine_int8_cuts_comm_while_learning():
     """Acceptance: codec='int8' cuts accumulated comm >= 3.5x vs fp32 at
     matched rounds, and the training loss still decreases. Shallow split

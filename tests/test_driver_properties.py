@@ -15,7 +15,13 @@ pipeline) and asserts the invariants the driver's design note promises:
     (commits can only move earlier when a group commits at the end of
     its server compute instead of the end of its download);
   * a finite shared ingress can only slow the pipelined clock, and the
-    fluid max-min fair upload schedule respects per-job lower bounds.
+    fluid max-min fair upload schedule respects per-job lower bounds;
+  * full-duplex finite resources (downlink capacity, server backward
+    slots, re-dispatch gating): the clock stays monotone and nothing is
+    dropped under ANY (uplink, downlink, server-slot) capacities, a
+    finite-resource clock never beats the infinite-resource one on a
+    fixed schedule, and the cross-window ``FluidLink`` conserves bytes
+    over arbitrary aggregation-window boundaries.
 """
 import math
 
@@ -23,8 +29,8 @@ import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
 
-from repro.comm import CommChannel, shared_link_finish_times
-from repro.core.driver import AnalyticCost, RoundDriver
+from repro.comm import CommChannel, FluidLink, shared_link_finish_times
+from repro.core.driver import AnalyticCost, RoundDriver, _ServerQueue
 from repro.core.scheduler import FixedSplitScheduler, SlidingSplitScheduler
 from repro.core.simulation import make_device_grid
 from repro.core.split import SplitPlan
@@ -46,13 +52,20 @@ def _rand_costs(rng):
 
 def _drive(costs, *, n_devices, rounds, per_round, quorum, cap, seed,
            mode="semi_async", pipeline=False, latency=0.0,
-           uplink_capacity=0.0, scheduler=SlidingSplitScheduler):
+           uplink_capacity=0.0, downlink_capacity=0.0,
+           server_concurrency=0, gate_redispatch=False,
+           latency_dist="constant",
+           scheduler=SlidingSplitScheduler):
     devices = make_device_grid(n_devices, seed=seed)
     ch = CommChannel(codec="fp32", latency=latency,
-                     uplink_capacity=uplink_capacity)
+                     uplink_capacity=uplink_capacity,
+                     downlink_capacity=downlink_capacity,
+                     latency_dist=latency_dist)
     drv = RoundDriver(scheduler(PLAN), AnalyticCost(ch, costs, p=32),
                       devices, mode=mode, staleness_cap=cap,
-                      quorum=quorum, pipeline=pipeline)
+                      quorum=quorum, pipeline=pipeline,
+                      server_concurrency=server_concurrency,
+                      gate_redispatch=gate_redispatch)
     rng = np.random.default_rng(seed)
     recs = []
     for r in range(rounds):
@@ -184,3 +197,179 @@ def test_shared_link_schedule_invariants(seed, n_jobs, capacity):
     wider = shared_link_finish_times(jobs, capacity * 2.0)
     for f2, f1 in zip(wider, fins):
         assert f2 <= f1 + 1e-6 * max(f1, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# full-duplex finite resources (server slots, downlink contention, gating)
+# ---------------------------------------------------------------------------
+def _resource_kw(rng):
+    """A random resource regime: each capacity is off or finite, server
+    slots 0 (unbounded) .. 3, gating on/off, latency draws on/off."""
+    return dict(
+        uplink_capacity=float(rng.choice([0.0, rng.uniform(1e5, 1e7)])),
+        downlink_capacity=float(rng.choice([0.0, rng.uniform(1e5, 1e7)])),
+        server_concurrency=int(rng.integers(0, 4)),
+        gate_redispatch=bool(rng.integers(0, 2)),
+        latency=float(rng.choice([0.0, rng.uniform(0.0, 0.3)])),
+        latency_dist=str(rng.choice(["constant", "uniform",
+                                     "lognormal", "exp"])))
+
+
+@given(**DRIVER_ARGS)
+@settings(max_examples=40, deadline=None)
+def test_clock_monotone_under_any_resource_caps(seed, n_devices, rounds,
+                                                quorum, cap):
+    """The core liveness/safety invariants survive EVERY combination of
+    (uplink, downlink, server-slot) capacities, gating and latency
+    draws: the clock never goes backwards, nothing dispatched is ever
+    dropped or double-committed, and staleness stays within the cap."""
+    rng = np.random.default_rng(seed)
+    costs = _rand_costs(rng)
+    per_round = int(rng.integers(1, n_devices + 1))
+    for mode in ("sync", "semi_async"):
+        drv, recs, flushed = _drive(
+            costs, n_devices=n_devices, rounds=rounds,
+            per_round=per_round, quorum=quorum, cap=cap, seed=seed,
+            mode=mode, pipeline=True, **_resource_kw(rng))
+        clocks = [0.0] + [r.clock for r in recs] + [drv.clock]
+        assert all(b >= a for a, b in zip(clocks, clocks[1:]))
+        assert all(r.round_time >= 0.0 for r in recs)
+        committed = [k for r in recs for k in r.committed] + list(flushed)
+        assert sorted(committed) == sorted(
+            c for r in recs for c in r.splits)
+        assert not drv._pending and not drv._downloads
+        assert not drv._flights          # every flight fully drained
+        for r in recs:
+            assert all(v <= cap for v in r.staleness.values()), r
+
+
+@given(**DRIVER_ARGS)
+@settings(max_examples=30, deadline=None)
+def test_finite_resources_never_beat_infinite(seed, n_devices, rounds,
+                                              quorum, cap):
+    """On a FIXED schedule (FixedSplitScheduler keeps the two runs'
+    dispatches identical) every finite resource — shared ingress, shared
+    egress, bounded server concurrency, re-dispatch gating — can only
+    delay events, so the resource-constrained flushed clock is >= the
+    free-overlap one, with identical wire traffic."""
+    rng = np.random.default_rng(seed)
+    costs = _rand_costs(rng)
+    per_round = int(rng.integers(1, n_devices + 1))
+    kw = dict(n_devices=n_devices, rounds=rounds, per_round=per_round,
+              quorum=quorum, cap=cap, seed=seed, pipeline=True,
+              scheduler=FixedSplitScheduler)
+    free, _, _ = _drive(costs, **kw)
+    jam, _, _ = _drive(
+        costs, uplink_capacity=float(rng.uniform(1e5, 1e7)),
+        downlink_capacity=float(rng.uniform(1e5, 1e7)),
+        server_concurrency=int(rng.integers(1, 4)),
+        gate_redispatch=True, **kw)
+    assert jam.clock >= free.clock - 1e-9 * max(free.clock, 1.0)
+    assert jam.comm == pytest.approx(free.comm)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       n_batches=st.integers(1, 6),
+       capacity=st.floats(10.0, 1e4))
+@settings(max_examples=50, deadline=None)
+def test_fluid_link_byte_conservation_across_windows(seed, n_batches,
+                                                     capacity):
+    """A FluidLink carrying flows across aggregation windows conserves
+    bytes: at every checkpoint each flow's in-flight remainder is within
+    [0, size] and non-increasing, the aggregate drain between
+    checkpoints never exceeds capacity * dt, and once the last solve's
+    horizon passes everything has drained exactly."""
+    rng = np.random.default_rng(seed)
+    link = FluidLink(capacity)
+    t0 = 0.0
+    checkpoints = [0.0]
+    for _ in range(n_batches):           # batches at increasing clocks
+        for _ in range(int(rng.integers(1, 5))):
+            link.submit(t0 + float(rng.uniform(0, 20)),
+                        float(rng.uniform(0, 5e3)),
+                        float(rng.uniform(1.0, 1e3)))
+        t0 += float(rng.uniform(5, 40))
+        checkpoints.append(t0)
+    total = link.submitted_bytes
+    fins = link.solve()
+    prev = None
+    prev_t = None
+    for t in sorted(checkpoints + [max(fins) if fins else 0.0]):
+        rem = link.remaining_at(t)
+        sizes = link._bytes
+        assert all(-1e-6 <= r <= b + 1e-6
+                   for r, b in zip(rem, sizes))
+        if prev is not None:
+            drained = sum(prev) - sum(rem)
+            assert drained >= -1e-6              # monotone drain
+            assert drained <= capacity * (t - prev_t) + 1e-6 * total \
+                + 1e-6                           # capacity respected
+        prev, prev_t = rem, t
+    # everything drains by the solved horizon, and nothing before its
+    # own best case
+    assert sum(link.remaining_at(max(fins) if fins else 0.0)) \
+        == pytest.approx(0.0, abs=1e-5 * max(total, 1.0))
+    for (a, b, r), f in zip(zip(link._arrive, link._bytes, link._caps),
+                            fins):
+        best = a + b / min(r, capacity)
+        assert f >= best - 1e-6 * max(best, 1.0)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       n_jobs=st.integers(1, 15),
+       slots=st.integers(1, 4))
+@settings(max_examples=50, deadline=None)
+def test_server_queue_fifo_invariants(seed, n_jobs, slots):
+    """The finite server queue: no job finishes before its own work
+    could, at most ``slots`` jobs overlap at any instant, more slots
+    never finish later, and infinite slots degenerate to
+    arrival + duration."""
+    rng = np.random.default_rng(seed)
+    q = _ServerQueue(slots)
+    jobs = [(float(rng.uniform(0, 50)), float(rng.uniform(0.1, 20)))
+            for _ in range(n_jobs)]
+    for a, d in jobs:
+        q.add(a, d)
+    fins = q.solve()
+    for (a, d), f in zip(jobs, fins):
+        assert f >= a + d - 1e-9
+    # concurrency bound: starts/finishes define at most `slots` overlaps
+    starts = [f - d for (a, d), f in zip(jobs, fins)]
+    for (a, d), f in zip(jobs, fins):
+        mid = f - 0.5 * d
+        running = sum(1 for s, g in zip(starts, fins) if s < mid < g)
+        assert running <= slots
+    wide = _ServerQueue(slots + 1)
+    for a, d in jobs:
+        wide.add(a, d)
+    for f2, f1 in zip(wide.solve(), fins):
+        assert f2 <= f1 + 1e-9
+    free = _ServerQueue(math.inf)
+    for a, d in jobs:
+        free.add(a, d)
+    for (a, d), f in zip(jobs, free.solve()):
+        assert f == pytest.approx(a + d)
+
+
+@given(**DRIVER_ARGS)
+@settings(max_examples=20, deadline=None)
+def test_driver_drains_its_links_completely(seed, n_devices, rounds,
+                                            quorum, cap):
+    """Driver-level byte conservation: after flush() every byte ever
+    submitted to the cross-window uplink/downlink FluidLinks has
+    drained (nothing is lost at an aggregation-window boundary)."""
+    rng = np.random.default_rng(seed)
+    costs = _rand_costs(rng)
+    per_round = int(rng.integers(1, n_devices + 1))
+    drv, _, _ = _drive(
+        costs, n_devices=n_devices, rounds=rounds, per_round=per_round,
+        quorum=quorum, cap=cap, seed=seed, pipeline=True,
+        uplink_capacity=float(rng.uniform(1e5, 1e7)),
+        downlink_capacity=float(rng.uniform(1e5, 1e7)),
+        server_concurrency=int(rng.integers(0, 3)))
+    for link in (drv._uplink, drv._downlink):
+        if link is None or not len(link):
+            continue
+        rem = link.remaining_at(drv.clock)
+        assert sum(rem) == pytest.approx(
+            0.0, abs=1e-6 * max(link.submitted_bytes, 1.0))

@@ -15,6 +15,10 @@ from repro.data.partition import federate
 from repro.data.synthetic import make_image_dataset, make_lm_dataset
 from repro.models import SplitModel
 
+# training-heavy module: the quick loop skips it (-m "not slow"; see pytest.ini)
+pytestmark = pytest.mark.slow
+
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -210,6 +210,7 @@ def _param_sum(eng):
                          for l in jax.tree.leaves(eng.params)]))
 
 
+@pytest.mark.slow
 def test_golden_fp32_no_feedback_bit_exact():
     """codec=fp32, error_feedback=False must stay EXACTLY the pre-PR
     engine: same clock, same wire bytes, same trained parameters (the
@@ -234,6 +235,7 @@ def test_golden_fedavg_fp32_bit_exact():
 # ---------------------------------------------------------------------------
 # dispatch-leg compression through the engine
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 def test_engine_dispatch_codec_meters_and_cuts_comm():
     """An int8 dispatch codec compresses the 2|Wc| legs: the model-leg
     bytes are metered exactly, total comm shrinks vs fp32 at matched
@@ -248,6 +250,7 @@ def test_engine_dispatch_codec_meters_and_cuts_comm():
     assert np.isfinite(losses).all() and losses[-1] < losses[0]
 
 
+@pytest.mark.slow
 def test_engine_fedavg_qsgd_baseline():
     """Compressed-FedAvg: broadcast + QSGD-style int8 update upload cut
     the round bytes well below the fp32 baseline while the loss still
@@ -260,6 +263,7 @@ def test_engine_fedavg_qsgd_baseline():
     assert abs(qsgd.history[-1]["loss"] - base.history[-1]["loss"]) < 0.1
 
 
+@pytest.mark.slow
 def test_engine_uplink_topk_with_feedback_trains():
     """Top-k features + error feedback: large byte cut, loss still
     decreasing, residual state actually populated."""

@@ -18,6 +18,9 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import get_config
 from repro.models.params import count_params, is_def, param_specs
 from repro.models.sharding import mesh_rules
+
+# training-heavy module: the quick loop skips it (-m "not slow"; see pytest.ini)
+pytestmark = pytest.mark.slow
 from repro.models.transformer import model_defs
 from repro.utils.hlo import collective_bytes
 
@@ -95,6 +98,7 @@ from repro.configs import get_config, make_reduced
 from repro.core.round_step import make_s2fl_train_step, train_step_shardings
 from repro.launch.steps import train_inputs
 from repro.models.transformer import abstract_model
+
 
 cfg = make_reduced(get_config("{arch}"))
 mesh = jax.make_mesh((4, 2), ("data", "model"))
