@@ -30,8 +30,11 @@ def _sim(arch, n_devices, per_round, composition=None, rounds=20, seed=0,
     device-grid setup (the expensive part: XLA cost analysis per split)
     is built exactly once. Resource capacities ride on a per-variant
     CommChannel (``uplink``/``downlink`` elements/s) while
-    ``server_slots``/``gate`` ride the driver. Returns
-    (sfl_clock, [s2_clock per variant])."""
+    ``server_slots``/``gate`` ride the driver. A variant with
+    ``record: True`` gets a flight-level ``observe.Recorder`` injected
+    so its clock can be critical-path-decomposed afterwards. Returns
+    (sfl_clock, [s2_clock per variant], [recorder or None per
+    variant])."""
     from repro.comm import CommChannel
     from repro.configs import get_config
     from repro.core.driver import AnalyticCost, RoundDriver
@@ -40,6 +43,7 @@ def _sim(arch, n_devices, per_round, composition=None, rounds=20, seed=0,
     from repro.core.simulation import make_device_grid
     from repro.core.split import default_plan
     from repro.models import SplitModel
+    from repro.observe import Recorder
     from repro.utils.flops import split_costs
 
     model = SplitModel(get_config(arch))
@@ -49,17 +53,19 @@ def _sim(arch, n_devices, per_round, composition=None, rounds=20, seed=0,
                                composition=composition)
     sfl = RoundDriver(FixedSplitScheduler(plan),
                       AnalyticCost(CommChannel(), costs, p=128), devices)
-    s2s = []
+    s2s, recorders = [], []
     for v in variants:
         ch = CommChannel(uplink_capacity=v.get("uplink", 0.0),
                          downlink_capacity=v.get("downlink", 0.0))
+        rec = Recorder() if v.get("record") else None
+        recorders.append(rec)
         s2s.append(RoundDriver(
             SlidingSplitScheduler(plan), AnalyticCost(ch, costs, p=128),
             devices, mode=v.get("mode", "sync"),
             staleness_cap=v.get("staleness_cap", 1),
             pipeline=v.get("pipeline", False),
             server_concurrency=v.get("server_slots", 0),
-            gate_redispatch=v.get("gate", False)))
+            gate_redispatch=v.get("gate", False), recorder=rec))
     rng = np.random.default_rng(seed)
     for r in range(rounds):
         part = rng.choice(devices, size=per_round, replace=False)
@@ -70,7 +76,7 @@ def _sim(arch, n_devices, per_round, composition=None, rounds=20, seed=0,
     # every clock covers the same completed work (sync: empty heaps)
     for drv in s2s:
         drv.flush()
-    return sfl.clock, [drv.clock for drv in s2s]
+    return sfl.clock, [drv.clock for drv in s2s], recorders
 
 
 def run(quick: bool = False):
@@ -80,8 +86,8 @@ def run(quick: bool = False):
     # fig 5: x devices per round
     for x in ((5, 10) if quick else (5, 10, 15, 20)):
         with Timer() as t:
-            sfl, (s2,) = _sim("vgg16", n_devices=n_dev, per_round=x,
-                              rounds=rounds)
+            sfl, (s2,), _ = _sim("vgg16", n_devices=n_dev, per_round=x,
+                                 rounds=rounds)
         emit(f"fig5.devices_{x}", t.us,
              f"sfl_clock={sfl:.1f};s2fl_clock={s2:.1f};"
              f"speedup={sfl / s2:.2f}x")
@@ -103,7 +109,7 @@ def run(quick: bool = False):
     for name, comp in (("5:3:2", {"high": 5, "mid": 3, "low": 2}),
                        ("2:3:5", {"high": 2, "mid": 3, "low": 5})):
         with Timer() as t:
-            sfl, (s2, s2_async, s2_pipe, s2_cont, s2_rsrc) = _sim(
+            sfl, (s2, s2_async, s2_pipe, s2_cont, s2_rsrc), recs = _sim(
                 "vgg16", n_devices=n_dev, per_round=10,
                 composition=comp, rounds=rounds,
                 variants=({"mode": "sync"},
@@ -114,11 +120,19 @@ def run(quick: bool = False):
                           {"mode": "semi_async", "pipeline": True,
                            "uplink": SERVER_RATE,
                            "downlink": SERVER_RATE,
-                           "server_slots": 2, "gate": True}))
+                           "server_slots": 2, "gate": True,
+                           "record": True}))
         async_speedup = s2 / s2_async
         pipe_speedup = s2_async / s2_pipe
         cont_slowdown = s2_cont / s2_pipe
         rsrc_slowdown = s2_rsrc / s2_pipe
+        # critical-path attribution of the resource-constrained clock:
+        # where its wall time actually went (fractions of the summed
+        # window makespans), verified to reconstruct each window
+        from repro.observe import summarize, verify_reconstruction
+        verify_reconstruction(recs[-1])
+        crit = summarize(recs[-1])
+        fr = crit["fractions"]
         emit(f"fig6.comp_{name}", t.us,
              f"sfl_clock={sfl:.1f};s2fl_clock={s2:.1f};"
              f"speedup={sfl / s2:.2f}x;"
@@ -129,7 +143,12 @@ def run(quick: bool = False):
              f"s2fl_pipe_cont_clock={s2_cont:.1f};"
              f"contention_slowdown={cont_slowdown:.2f}x;"
              f"s2fl_pipe_rsrc_clock={s2_rsrc:.1f};"
-             f"resource_slowdown={rsrc_slowdown:.2f}x")
+             f"resource_slowdown={rsrc_slowdown:.2f}x;"
+             f"crit_uplink_wait={fr.get('uplink_wait', 0.0):.3f};"
+             f"crit_queue_wait={fr.get('queue_wait', 0.0):.3f};"
+             f"crit_server={fr.get('server_compute', 0.0):.3f};"
+             f"crit_downlink={fr.get('downlink_drain', 0.0):.3f};"
+             f"top_straggler={crit['top_straggler']}")
         if name == "2:3:5":
             # acceptance: straggler overlap can only help the clock, and
             # phase overlap can only help further:
@@ -148,8 +167,8 @@ def run(quick: bool = False):
     # fig 7: |C| at 0.1 sampling
     for C in ((20,) if quick else (20, 50, 100)):
         with Timer() as t:
-            sfl, (s2,) = _sim("vgg16", n_devices=C,
-                              per_round=max(2, C // 10), rounds=rounds)
+            sfl, (s2,), _ = _sim("vgg16", n_devices=C,
+                                 per_round=max(2, C // 10), rounds=rounds)
         emit(f"fig7.clientset_{C}", t.us,
              f"sfl_clock={sfl:.1f};s2fl_clock={s2:.1f};"
              f"speedup={sfl / s2:.2f}x")

@@ -1,0 +1,118 @@
+"""Summarize a flight-level trace: per-window critical-path table and
+component totals.
+
+    # summarize a trace written by `repro.launch.train --trace-out`
+    PYTHONPATH=src python -m benchmarks.trace_report trace.json
+
+    # or generate a quick pipelined contended demo trace (model-free
+    # synthetic costs — no XLA analysis, runs in seconds) and write it
+    PYTHONPATH=src python -m benchmarks.trace_report --demo \\
+        --out pipeline_trace.json
+
+The trace file is the Chrome trace-event JSON (Perfetto-loadable) with
+the full recorder dump embedded under its ``"s2fl"`` key — one artifact
+serves both the viewer and this summarizer.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.observe import (load_recorder, summarize, verify_reconstruction,
+                           window_breakdown, write_chrome_trace)
+
+# Synthetic per-split Eq.-1 quantities (the tests/test_driver.py regime:
+# wc grows with the split, the cut-layer feature shrinks) — model-free
+# so the demo needs no XLA cost analysis.
+_PLAN_SPLITS = (1, 2, 4)
+_COSTS = {1: dict(wc_size=2.0e5, feat_size=8.0e3, fc=6.0e8, fs=2.4e9),
+          2: dict(wc_size=6.0e5, feat_size=4.0e3, fc=1.2e9, fs=1.8e9),
+          4: dict(wc_size=1.8e6, feat_size=2.0e3, fc=2.4e9, fs=6.0e8)}
+
+
+def demo_recorder(rounds: int = 10, n_devices: int = 12,
+                  per_round: int = 5, seed: int = 0):
+    """A recorded pipelined run against a finite Main Server: contended
+    ingress AND egress, two server slots, gated re-dispatch,
+    per-device-round latency draws — every subsystem the trace can
+    see."""
+    import numpy as np
+
+    from repro.comm import CommChannel, StaticLink
+    from repro.core.driver import AnalyticCost, RoundDriver
+    from repro.core.scheduler import SlidingSplitScheduler
+    from repro.core.simulation import SERVER_RATE, make_device_grid
+    from repro.core.split import SplitPlan
+    from repro.observe import Recorder
+
+    devices = make_device_grid(n_devices, seed=seed)
+    ch = CommChannel(codec="fp32", link=StaticLink(), latency=0.01,
+                     latency_dist="uniform",
+                     uplink_capacity=SERVER_RATE,
+                     downlink_capacity=SERVER_RATE)
+    rec = Recorder()
+    drv = RoundDriver(
+        SlidingSplitScheduler(SplitPlan(n_units=8,
+                                        split_points=_PLAN_SPLITS)),
+        AnalyticCost(ch, _COSTS, p=64), devices, mode="semi_async",
+        pipeline=True, server_concurrency=2, gate_redispatch=True,
+        recorder=rec)
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        drv.run_round(rng.choice(devices, size=per_round, replace=False))
+    drv.flush()
+    return rec
+
+
+def report(rec):
+    err = verify_reconstruction(rec)
+    rows = window_breakdown(rec)
+    s = summarize(rec)
+    print(f"{'win':>4} {'kind':<6} {'makespan':>10} {'critical':>8}  "
+          f"decomposition")
+    for row in rows:
+        comp = "  ".join(f"{k}={v:.3f}"
+                         for k, v in sorted(row["components"].items())
+                         if abs(v) > 1e-12)
+        cid = row["critical_cid"]
+        print(f"{row['round']:>4} {row['kind']:<6} "
+              f"{row['makespan']:>10.4f} "
+              f"{('c' + str(cid)) if cid is not None else '-':>8}  "
+              f"{comp}")
+    print(f"\ntotal makespan {s['total_makespan']:.4f}s over "
+          f"{s['windows']} windows "
+          f"(max reconstruction err {err:.2e})")
+    print("component fractions:",
+          "  ".join(f"{k}={v:.3f}"
+                    for k, v in sorted(s["fractions"].items())))
+    if s["top_straggler"] is not None:
+        print(f"top straggler: device {s['top_straggler']} "
+              f"(critical in {s['stragglers'][s['top_straggler']]} "
+              f"windows, {s['straggler_time'][s['top_straggler']]:.3f}s)")
+    return s
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="critical-path summary of a flight-level trace")
+    ap.add_argument("trace", nargs="?", default=None,
+                    help="trace JSON written by --trace-out / --out")
+    ap.add_argument("--demo", action="store_true",
+                    help="generate and summarize a quick pipelined "
+                         "contended demo run (synthetic costs)")
+    ap.add_argument("--out", default=None,
+                    help="also write the (demo) trace JSON here")
+    args = ap.parse_args(argv)
+    if args.demo:
+        rec = demo_recorder()
+    elif args.trace:
+        rec = load_recorder(args.trace)
+    else:
+        ap.error("give a trace file or --demo")
+    if args.out:
+        write_chrome_trace(rec, args.out)
+        print(f"trace written to {args.out}")
+    report(rec)
+
+
+if __name__ == "__main__":
+    main()

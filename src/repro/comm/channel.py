@@ -119,6 +119,10 @@ class CommChannel:
         self._round_disp_up = {}     # cid -> collect-leg bytes this round
         self._round_disp_down = {}   # cid -> dispatch-leg bytes
         self._residuals = {}         # (direction, cid[, leaf]) -> tensor
+        # observability: an observe.TraceRecorder injected by the
+        # engine/caller (None or disabled = zero overhead — the wire
+        # hooks guard before touching it)
+        self.recorder = None
 
     # --------------------------------------------------- error feedback
     @property
@@ -167,6 +171,10 @@ class CommChannel:
         else:
             out, nbytes = self._ef_roundtrip(codec, (direction, cid), msg)
         meter[cid] = meter.get(cid, 0.0) + nbytes
+        rec = self.recorder
+        if rec is not None and rec.enabled:
+            rec.count(f"comm.{direction}.msgs")
+            rec.count(f"comm.{direction}.bytes", nbytes)
         return out, nbytes
 
     def uplink_features(self, cid, feats):
@@ -215,6 +223,10 @@ class CommChannel:
             self.disp_down_bytes += nbytes
         else:
             self.disp_up_bytes += nbytes
+        rec = self.recorder
+        if rec is not None and rec.enabled:
+            rec.count(f"comm.{direction}.msgs")
+            rec.count(f"comm.{direction}.bytes", nbytes)
         return out
 
     # ------------------------------------------------------- accounting

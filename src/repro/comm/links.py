@@ -319,6 +319,8 @@ class FluidLink:
         self._caps: list = []
         self._live: list = []          # fids still in the schedule
         self._finish_cache: dict = {}  # retired fid -> finish
+        self.n_solves = 0              # fluid re-solve calls (telemetry)
+        self.n_retired = 0             # flows retired by compact()
 
     def __len__(self):
         return len(self._arrive)
@@ -347,6 +349,7 @@ class FluidLink:
     def solve(self):
         """Finish times of ALL flows (retired ones from the cache),
         assuming no future arrivals."""
+        self.n_solves += 1
         fins = [0.0] * len(self._arrive)
         for f, fin in self._finish_cache.items():
             fins[f] = fin
@@ -385,6 +388,20 @@ class FluidLink:
             for f in retired:
                 self._finish_cache[f] = fins[f]
             self._live = kept
+            self.n_retired += len(retired)
+
+    def utilization(self, t0: float, t1: float) -> float:
+        """Fraction of the link capacity actually used over [t0, t1]:
+        bytes drained by live flows in the interval over
+        ``capacity * (t1 - t0)``. 0.0 on an uncontended (infinite-
+        capacity) link or an empty interval. Observational only (two
+        right-censored solves); retired flows report zero remaining at
+        both ends and transferred nothing in any interval past their
+        retirement, so the difference stays exact."""
+        if t1 <= t0 or not self.contended:
+            return 0.0
+        drained = sum(self.remaining_at(t0)) - sum(self.remaining_at(t1))
+        return max(0.0, drained) / (self.capacity * (t1 - t0))
 
 
 # ---------------------------------------------------------------------------

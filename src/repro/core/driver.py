@@ -472,6 +472,14 @@ class _ServerQueue:
                 self._finish_cache[j] = fins[j]
             self._live = kept
 
+    def depth_at(self, t: float) -> int:
+        """Jobs arrived but unfinished at ``t`` (waiting + running) —
+        the queue-depth gauge the TraceRecorder samples. Observational
+        only: re-uses ``solve()``, never mutates the schedule."""
+        fins = self.solve()
+        return sum(1 for i in self._live
+                   if self._arrive[i] <= t < fins[i])
+
 
 @dataclasses.dataclass
 class _Flight:
@@ -491,6 +499,8 @@ class _Flight:
     key: object = None         # commit work-item (group) key
     commit: float = math.nan
     dl_end: float = math.nan
+    dispatch: float = 0.0      # phase start (dispatch clock + gate wait)
+    up_end: float = math.nan   # latest solved uplink-flow finish
 
 
 class RoundDriver:
@@ -509,6 +519,9 @@ class RoundDriver:
     gate_redispatch : a device's next upload waits out its own draining
                 download (off = device-overcommit optimism; pipeline
                 only)
+    recorder  : an ``observe.TraceRecorder`` (None or the no-op default
+                = zero overhead: every hook site guards on
+                ``recorder.enabled`` before building any record)
     """
 
     def __init__(self, scheduler, cost: CostModel, devices, *,
@@ -516,7 +529,7 @@ class RoundDriver:
                  quorum: float = 0.5, predictive: bool = False,
                  pipeline: bool = False, warmup_devices=None,
                  server_concurrency: int = 0,
-                 gate_redispatch: bool = False):
+                 gate_redispatch: bool = False, recorder=None):
         if mode not in EXEC_MODES:
             raise ValueError(f"exec mode {mode!r}; known: {EXEC_MODES}")
         if staleness_cap < 0:
@@ -539,6 +552,7 @@ class RoundDriver:
         self.pipeline = bool(pipeline)
         self.server_concurrency = int(server_concurrency)
         self.gate_redispatch = bool(gate_redispatch)
+        self.recorder = recorder
         self.clock = 0.0
         self.comm = 0.0                 # accumulated wire bytes
         self.round = 0
@@ -658,6 +672,9 @@ class RoundDriver:
         self.clock = new_clock
         self.comm += comm
         self.scheduler.end_round()
+        if self.recorder is not None and self.recorder.enabled:
+            self._observe_round(groups, commits, clock0, committed,
+                                staleness, new_clock)
         rec = RoundResult(
             round=self.round, clock=self.clock,
             round_time=new_clock - clock0, comm_bytes=comm, splits=splits,
@@ -667,6 +684,61 @@ class RoundDriver:
         self.round += 1
         self._prune_flights()
         return rec
+
+    # ----------------------------------------------------- observability
+    def _observe_round(self, groups, commits, clock0, committed,
+                       staleness, new_clock):
+        """Feed the injected TraceRecorder after the window closed:
+        upsert every live flight's span estimates (the same
+        latest-wins semantics as the driver's own ``_Flight``
+        revisions — once a flight's window has closed its record is
+        final), record atomic lumps for work not phase-decomposed, the
+        window itself, and the round's gauges. Only reached when a
+        recording recorder is injected; the default path never builds
+        any of this."""
+        rec = self.recorder
+        for fl in self._flights.values():
+            pc = fl.pc
+            rec.flight(fl.uid, cid=fl.cid, round=fl.round, key=fl.key,
+                       dispatch=fl.dispatch, t_pre=pc.t_pre,
+                       up_start=fl.dispatch + pc.t_pre,
+                       up_bytes=pc.up_bytes, up_rate=pc.up_rate,
+                       up_end=fl.up_end,
+                       srv_start=fl.commit - pc.t_srv,
+                       srv_end=fl.commit,
+                       dl_xfer_end=fl.dl_end - pc.post_time(),
+                       dl_end=fl.dl_end)
+        flight_cids = set(self._round_uids) if self.pipeline else set()
+        for key, members in groups.items():
+            atoms = [c for c in members if c not in flight_cids]
+            if atoms:
+                rec.atomic(key, self.round, atoms, clock0,
+                           max(commits[c] for c in atoms))
+        rec.window(self.round, clock0, new_clock, staleness,
+                   len(self._pending))
+        rec.count("driver.rounds")
+        rec.count("driver.commits", len(committed))
+        rec.gauge("window.staleness.max", new_clock,
+                  max(staleness.values(), default=0))
+        rec.gauge("window.pending", new_clock, len(self._pending))
+        if self._srvq is not None:
+            rec.gauge("server.queue_depth", new_clock,
+                      self._srvq.depth_at(new_clock))
+            rec.gauge("downloads.in_flight", new_clock,
+                      len(self._downloads))
+            for name, link in (("uplink", self._uplink),
+                               ("downlink", self._downlink)):
+                rec.gauge(f"{name}.live_flows", new_clock,
+                          len(link._live))
+                rec.gauge(f"{name}.solves", new_clock, link.n_solves)
+                rec.gauge(f"{name}.retired", new_clock, link.n_retired)
+                if link.contended and new_clock > clock0:
+                    rec.gauge(f"{name}.utilization", new_clock,
+                              link.utilization(clock0, new_clock))
+        ch = getattr(self.cost, "channel", None)
+        if ch is not None and getattr(ch, "error_feedback", False):
+            rec.gauge("channel.ef_residual", new_clock,
+                      ch.residual_norm())
 
     # --------------------------------------------------- phase pipeline
     def _phase_schedule(self, part, splits, payloads, pay_up, pay_down,
@@ -739,7 +811,7 @@ class RoundDriver:
                                       pc.up_rate)
             jid = self._srvq.add(math.inf, pc.t_srv)
             fl = _Flight(uid=self._next_uid, cid=c, round=self.round,
-                         fid=fid, jid=jid, pc=pc)
+                         fid=fid, jid=jid, pc=pc, dispatch=start)
             self._next_uid += 1
             self._flights[fl.uid] = fl
             self._round_uids[c] = fl.uid
@@ -749,6 +821,7 @@ class RoundDriver:
         # schedule → server FIFO queue → egress fluid schedule
         up_fin = self._uplink.solve()
         for fl in self._flights.values():
+            fl.up_end = up_fin[fl.fid]
             self._srvq.set_arrival(fl.jid, up_fin[fl.fid])
         srv_fin = self._srvq.solve()
         for fl in self._flights.values():
@@ -877,10 +950,18 @@ class RoundDriver:
             + [r for r, *_ in self._downloads]
         if not ready:
             return [], {}
+        clock0 = self.clock
         new_clock = max(ready)
         done = self._pop_ready(new_clock)
         self._drain_downloads(new_clock)
         self.clock = max(self.clock, new_clock)
+        staleness = {e.key: self.round - 1 - e.round for e in done}
+        if self.recorder is not None and self.recorder.enabled:
+            # flight spans were already (finally) recorded by the last
+            # round's sweep — flush adds no re-solve, only the drain
+            # window itself
+            self.recorder.window(self.round - 1, clock0, self.clock,
+                                 staleness, len(self._pending),
+                                 kind="flush")
         self._prune_flights()
-        return [e.key for e in done], \
-            {e.key: self.round - 1 - e.round for e in done}
+        return [e.key for e in done], staleness

@@ -70,7 +70,7 @@ class S2FLEngine:
 
     def __init__(self, model: SplitModel, data: dict, ecfg: EngineConfig,
                  devices: Optional[list] = None,
-                 plan: Optional[SplitPlan] = None):
+                 plan: Optional[SplitPlan] = None, recorder=None):
         self.model = model
         self.data = data
         self.ecfg = ecfg
@@ -92,6 +92,11 @@ class S2FLEngine:
         self.opt = sgd(ecfg.lr)
         self.params = model.init(jax.random.PRNGKey(ecfg.seed))
         self.channel = make_channel(ecfg.comm)
+        # observability (observe/): one recorder feeds both the driver's
+        # flight/window hooks and the channel's wire counters; None (the
+        # default) keeps every hook site a dead branch
+        self.recorder = recorder
+        self.channel.recorder = recorder
         self.history = []          # per round dicts
         self._hists = {cid: self._client_hist(cid) for cid in data}
         self._key = jax.random.PRNGKey(ecfg.seed + 1)
@@ -117,7 +122,8 @@ class S2FLEngine:
             predictive=dcfg.predictive, pipeline=dcfg.pipeline,
             server_concurrency=getattr(dcfg, "server_concurrency", 0),
             gate_redispatch=getattr(dcfg, "gate_redispatch", False),
-            warmup_devices=[d for d in self.devices if d.cid in data])
+            warmup_devices=[d for d in self.devices if d.cid in data],
+            recorder=recorder)
         self._held = {}            # gid -> un-committed round results
         self._next_gid = 0
 
@@ -496,22 +502,34 @@ class S2FLEngine:
                 "acc": correct / total if correct else None}
 
     def run(self, rounds: Optional[int] = None, eval_data=None,
-            eval_every: int = 10, verbose: bool = False):
-        for r in range(rounds or self.ecfg.rounds):
+            eval_every: int = 10, verbose: bool = False, on_round=None):
+        # rounds=0 is honored (flush-only call), only None falls back to
+        # the configured count
+        for r in range(self.ecfg.rounds if rounds is None else rounds):
             rec = self.run_round()
             if eval_data is not None and (r + 1) % eval_every == 0:
                 rec.update(self.evaluate(eval_data))
             if verbose:
                 print(rec)
+            if on_round is not None:
+                on_round(rec)
         # semi_async/pipeline: wait out and aggregate any still-in-flight
         # stragglers so no trained update is dropped at shutdown, and
         # fold the flush tail (late commits AND draining downloads) into
         # the final record so history[-1]['clock'] is the true total
-        # wall-clock even when the flush only waited for downloads
+        # wall-clock even when the flush only waited for downloads. Only
+        # patch when the flush actually advanced anything: with nothing
+        # pending (sync runs, or a second run()/flush) the final record
+        # is already honest and must not be rewritten.
         committed, _ = self.driver.flush()
         self._commit(committed)
         if self.history:
-            self.history[-1]["clock"] = self.clock
-            self.history[-1]["committed"] += len(committed)
-            self.history[-1]["pending"] = 0
+            last = self.history[-1]
+            if committed or last["pending"] \
+                    or last.get("downloads_in_flight"):
+                last["clock"] = self.clock
+                last["committed"] += len(committed)
+                last["pending"] = 0
+                if "downloads_in_flight" in last:
+                    last["downloads_in_flight"] = 0
         return self.history

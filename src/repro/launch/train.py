@@ -62,6 +62,22 @@ def main(argv=None):
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--history-out", default=None,
+                    help="dump engine.history (per-round records) as "
+                         "JSON to this path")
+    # observability (repro.observe) — see core/README.md §Observability
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON of the run "
+                         "(open in https://ui.perfetto.dev); also "
+                         "embeds the full recorder dump for "
+                         "benchmarks/trace_report.py")
+    ap.add_argument("--metrics-out", default=None,
+                    help="stream one JSON line per emission (round "
+                         "record + live metrics snapshot) to this "
+                         "path — the long-running-service feed")
+    ap.add_argument("--metrics-every", type=int, default=1,
+                    help="emit a metrics line every N rounds "
+                         "(with --metrics-out)")
     # transport (repro.comm)
     codecs = ["fp32", "bf16", "fp16", "int8", "topk", "randk"]
     ap.add_argument("--codec", "--uplink-codec", dest="codec",
@@ -166,17 +182,74 @@ def main(argv=None):
         local_steps=args.local_steps, lr=args.lr, seed=args.seed,
         use_balance=not args.no_balance, use_sliding=not args.no_sliding,
         n_classes=n_classes, comm=ccfg, driver=dcfg)
-    eng = S2FLEngine(model, fed, ecfg)
+    # observability: one recorder feeds the driver's flight/window
+    # hooks, the channel's wire counters, and (when streaming) the live
+    # metrics registry — absent flags, nothing is built and every hook
+    # stays a dead branch
+    recorder, registry, sink = None, None, None
+    if args.trace_out or args.metrics_out:
+        from repro.observe import JsonlSink, MetricsRegistry, Recorder
+        registry = MetricsRegistry() if args.metrics_out else None
+        recorder = Recorder(metrics=registry)
+        if args.metrics_out:
+            sink = JsonlSink(args.metrics_out)
+
+    eng = S2FLEngine(model, fed, ecfg, recorder=recorder)
+
+    emitted = 0
+
+    def on_round(rec):
+        nonlocal emitted
+        if sink is None:
+            return
+        if rec["round"] % max(args.metrics_every, 1) == 0:
+            sink.emit({"kind": "round", **rec,
+                       "metrics": registry.snapshot()})
+            emitted += 1
+
     t0 = time.time()
-    eng.run(eval_data=test, eval_every=args.eval_every, verbose=True)
+    eng.run(eval_data=test, eval_every=args.eval_every, verbose=True,
+            on_round=on_round)
     final = eng.evaluate(test)
-    print(f"mode={args.mode} arch={args.arch} rounds={args.rounds} "
-          f"final={final} sim_clock={eng.clock:.0f}s comm={eng.comm:.3e} "
-          f"wall={time.time() - t0:.0f}s")
+    wall = time.time() - t0
+
+    summary = {
+        "mode": args.mode, "arch": args.arch, "rounds": args.rounds,
+        "clients": args.clients, "per_round": args.per_round,
+        "final_loss": final["loss"], "final_acc": final["acc"],
+        "sim_clock_s": eng.clock, "comm_bytes": eng.comm,
+        "wall_s": wall,
+    }
+    print("== run summary ==")
+    for k, v in summary.items():
+        if isinstance(v, float):
+            print(f"  {k:<12} {v:.6g}")
+        else:
+            print(f"  {k:<12} {v}")
+
+    if sink is not None:
+        sink.emit({"kind": "summary", **summary,
+                   "metrics": registry.snapshot()})
+        sink.close()
+        print(f"  metrics      {args.metrics_out} "
+              f"({emitted + 1} records)")
+    if args.trace_out:
+        from repro.observe import summarize, write_chrome_trace
+        write_chrome_trace(recorder, args.trace_out)
+        crit = summarize(recorder)
+        print(f"  trace        {args.trace_out} "
+              f"({len(recorder.flights)} flights, "
+              f"{crit['windows']} windows, "
+              f"top straggler {crit['top_straggler']})")
+    if args.history_out:
+        with open(args.history_out, "w") as f:
+            json.dump(eng.history, f, indent=1)
+        print(f"  history      {args.history_out}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"history": eng.history, "final": final,
-                       "clock": eng.clock, "comm": eng.comm}, f, indent=1)
+                       "clock": eng.clock, "comm": eng.comm,
+                       "summary": summary}, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -164,6 +164,41 @@ def test_channel_per_direction_round_split():
     assert ch.estimate_uplink_payload(n) < ch.estimate_downlink_payload(n)
 
 
+def test_channel_round_split_reset_semantics():
+    """Per-round meters are per-round: reset_round() zeroes both the
+    payload and dispatch splits for every device, consecutive rounds
+    meter independently, and re-metering the same device within one
+    round accumulates (gated re-dispatch re-sends Wc)."""
+    ch = CommChannel(codec="int8", dispatch_codec="int8")
+    h = jax.random.normal(KEY, (4, 256))
+    w = [np.ones((8, 8), np.float32)]
+    # round 0: payload + model legs for device 3
+    ch.uplink_features(3, h)
+    ch.downlink_grads(3, h)
+    ch.dispatch_leaves(3, w)
+    ch.collect_leaves(3, w)
+    up0, down0 = ch.round_payload_split(3)
+    dd0, du0 = ch.round_dispatch_split(3)
+    assert up0 > 0 and down0 > 0 and dd0 > 0 and du0 > 0
+    # same-round re-dispatch accumulates, it does not overwrite
+    ch.dispatch_leaves(3, w)
+    assert ch.round_dispatch_split(3) == (pytest.approx(2 * dd0),
+                                          pytest.approx(du0))
+    ch.reset_round()
+    assert ch.round_payload_split(3) == (0.0, 0.0)
+    assert ch.round_dispatch_split(3) == (0.0, 0.0)
+    assert ch.round_payload(3) == 0.0 and ch.round_dispatch(3) == 0.0
+    # round 1: a fresh meter for a different device, 3 stays zero
+    ch.uplink_features(5, h)
+    ch.dispatch_leaves(5, w)
+    assert ch.round_payload_split(5) == (pytest.approx(up0), 0.0)
+    assert ch.round_dispatch_split(5) == (pytest.approx(dd0), 0.0)
+    assert ch.round_payload_split(3) == (0.0, 0.0)
+    # lifetime totals persist across the resets
+    assert ch.total_bytes == pytest.approx(
+        2 * up0 + down0 + 3 * dd0 + du0)
+
+
 def test_channel_validates_delay_knobs():
     with pytest.raises(ValueError):
         CommChannel(latency=-0.1)

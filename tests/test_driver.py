@@ -149,6 +149,25 @@ def test_empty_round_is_a_noop_on_the_clock():
     assert rec.round_time == 0.0 and rec.committed == ()
 
 
+def test_flush_with_nothing_pending_is_a_noop():
+    # sync commits everything inside its own round: flush finds nothing
+    drv, _ = _drive(rounds=3)
+    clock, comm = drv.clock, drv.comm
+    committed, staleness = drv.flush()
+    assert committed == [] and staleness == {}
+    assert drv.clock == clock and drv.comm == comm
+
+
+def test_flush_twice_second_is_a_noop():
+    drv, _ = _drive(mode="semi_async", pipeline=True)
+    committed, _ = drv.flush()
+    assert committed                      # the straggler tail drained
+    clock = drv.clock
+    again, stale = drv.flush()
+    assert again == [] and stale == {}
+    assert drv.clock == clock             # no double-advance
+
+
 # ---------------------------------------------------------------------------
 # phase pipeline (upload / server compute / download)
 # ---------------------------------------------------------------------------

@@ -55,6 +55,36 @@ def test_engine_ablation_flags():
         assert len(eng.history) == 2
 
 
+def test_run_flush_patch_is_idempotent():
+    """run() folds the flush tail into history[-1] only when the flush
+    actually advanced something: a sync run (nothing ever pending) and a
+    repeated run()/flush must leave the final record untouched."""
+    import copy
+
+    from repro.configs.base import DriverConfig
+
+    model, fed, _ = _cnn_setup(n=200, clients=4)
+    # sync: every round commits inside itself -> flush finds nothing
+    eng = S2FLEngine(model, fed, EngineConfig(
+        mode="s2fl", rounds=2, clients_per_round=3, batch_size=8))
+    eng.run(rounds=2)
+    last = copy.deepcopy(eng.history[-1])
+    assert last["pending"] == 0
+    eng.run(rounds=0)                     # flush again, nothing pending
+    assert eng.history[-1] == last and len(eng.history) == 2
+
+    # semi_async pipelined: the first flush really patches, the second
+    # run(rounds=0) must be a no-op on the already-honest record
+    eng = S2FLEngine(model, fed, EngineConfig(
+        mode="s2fl", rounds=2, clients_per_round=3, batch_size=8,
+        driver=DriverConfig(exec_mode="semi_async", pipeline=True)))
+    eng.run(rounds=2)
+    last = copy.deepcopy(eng.history[-1])
+    assert last["pending"] == 0 and last["clock"] == eng.clock
+    eng.run(rounds=0)
+    assert eng.history[-1] == last
+
+
 def test_scheduler_beats_fixed_split_on_vgg16_clock():
     """Straggler mitigation (Table 3 regime): on VGG16, where |Wc| upload
     dominates Eq. 1, the sliding split must cut the per-round wall time vs

@@ -1,0 +1,364 @@
+"""Observability subsystem (src/repro/observe): with the recorder off
+the pipeline goldens are bit-exact (the zero-overhead contract); with
+it on the timeline is unperturbed and the per-window critical-path
+decomposition reconstructs every window's makespan within 1e-6 relative
+tolerance — property-checked over randomized (uplink, downlink, server
+slots, latency-dist, gating, mode) regimes. Plus: span-field sanity,
+Chrome trace-event structure, recorder JSON round-trip, the metrics
+registry / JSONL sink units, and the engine integration."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.comm import CommChannel, StaticLink
+from repro.core.driver import AnalyticCost, RoundDriver
+from repro.core.scheduler import SlidingSplitScheduler
+from repro.core.simulation import make_device_grid
+from repro.core.split import SplitPlan
+from repro.observe import (Histogram, JsonlSink, MetricsRegistry,
+                           NullRecorder, Recorder, chrome_trace,
+                           load_recorder, summarize,
+                           verify_reconstruction, window_breakdown,
+                           write_chrome_trace)
+from tests.test_driver import (COSTS, GOLDEN_COMM, GOLDEN_PIPE_CLOCK,
+                               P, PLAN)
+
+
+def _drive(recorder=None, mode="semi_async", rounds=10, seed=0,
+           n_devices=12, per_round=5, pipeline=True, staleness_cap=1,
+           quorum=0.5, latency=0.0, latency_dist="constant",
+           uplink_capacity=0.0, downlink_capacity=0.0,
+           server_concurrency=0, gate_redispatch=False, flush=True):
+    """The tests/test_driver.py golden setup, with a recorder slot."""
+    devices = make_device_grid(n_devices, seed=seed)
+    ch = CommChannel(codec="fp32", link=StaticLink(), latency=latency,
+                     latency_dist=latency_dist, latency_seed=seed,
+                     uplink_capacity=uplink_capacity,
+                     downlink_capacity=downlink_capacity)
+    drv = RoundDriver(SlidingSplitScheduler(PLAN),
+                      AnalyticCost(ch, COSTS, p=P), devices, mode=mode,
+                      staleness_cap=staleness_cap, quorum=quorum,
+                      pipeline=pipeline,
+                      server_concurrency=server_concurrency,
+                      gate_redispatch=gate_redispatch, recorder=recorder)
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        drv.run_round(rng.choice(devices, size=per_round, replace=False))
+    if flush:
+        drv.flush()
+    return drv
+
+
+# ---------------------------------------------------------------------------
+# the overhead contract: default-off recorder leaves the goldens alone
+# ---------------------------------------------------------------------------
+def test_pipeline_goldens_unchanged_without_recorder():
+    drv = _drive(recorder=None)
+    assert drv.clock == pytest.approx(GOLDEN_PIPE_CLOCK, rel=1e-12)
+    assert drv.comm == pytest.approx(GOLDEN_COMM, rel=1e-12)
+
+
+def test_null_recorder_is_the_protocol_and_a_noop():
+    rec = NullRecorder()
+    assert not rec.enabled
+    # every hook is callable and returns nothing
+    rec.flight(0, cid=1)
+    rec.atomic("k", 0, [1], 0.0, 1.0)
+    rec.window(0, 0.0, 1.0, {}, 0)
+    rec.gauge("g", 0.0, 1.0)
+    rec.count("c")
+    drv = _drive(recorder=rec)
+    assert drv.clock == pytest.approx(GOLDEN_PIPE_CLOCK, rel=1e-12)
+    assert drv.comm == pytest.approx(GOLDEN_COMM, rel=1e-12)
+
+
+def test_recording_does_not_perturb_the_timeline():
+    """The recorder only observes: the golden pipelined clock/comm are
+    bit-identical with a live Recorder injected."""
+    rec = Recorder()
+    drv = _drive(recorder=rec)
+    assert drv.clock == pytest.approx(GOLDEN_PIPE_CLOCK, rel=1e-12)
+    assert drv.comm == pytest.approx(GOLDEN_COMM, rel=1e-12)
+    assert rec.flights and rec.windows
+    assert rec.counters["driver.rounds"] == 10
+
+
+# ---------------------------------------------------------------------------
+# span records
+# ---------------------------------------------------------------------------
+def test_flight_spans_are_ordered_and_complete():
+    rec = Recorder()
+    _drive(recorder=rec, uplink_capacity=5e5, downlink_capacity=5e5,
+           server_concurrency=2, latency=0.01)
+    assert len(rec.flights) == 10 * 5       # one per device-round
+    for fl in rec.flights.values():
+        for f in ("cid", "round", "key", "dispatch", "up_start",
+                  "up_end", "srv_start", "srv_end", "dl_xfer_end",
+                  "dl_end", "up_bytes", "up_rate", "t_pre"):
+            assert f in fl, fl
+        eps = 1e-9
+        assert fl["dispatch"] <= fl["up_start"] + eps
+        assert fl["up_start"] <= fl["up_end"] + eps
+        assert fl["up_end"] <= fl["srv_start"] + eps   # FIFO queue wait
+        assert fl["srv_start"] <= fl["srv_end"] + eps
+        assert fl["srv_end"] <= fl["dl_xfer_end"] + eps
+        assert fl["dl_xfer_end"] <= fl["dl_end"] + eps
+        # the uplink flow can't beat the device's own rate
+        assert fl["up_end"] - fl["up_start"] \
+            >= fl["up_bytes"] / fl["up_rate"] - eps
+
+
+def test_window_records_cover_the_run():
+    rec = Recorder()
+    drv = _drive(recorder=rec)
+    rounds = [w for w in rec.windows if w["kind"] == "round"]
+    flushes = [w for w in rec.windows if w["kind"] == "flush"]
+    assert len(rounds) == 10 and len(flushes) == 1
+    # windows tile the timeline: each opens at the previous close
+    for a, b in zip(rec.windows, rec.windows[1:]):
+        assert b["t0"] == pytest.approx(a["t_close"])
+    assert rec.windows[-1]["t_close"] == pytest.approx(drv.clock)
+
+
+def test_atomic_records_for_non_pipelined_rounds():
+    rec = Recorder()
+    drv = _drive(recorder=rec, pipeline=False, mode="sync", flush=False)
+    assert not rec.flights
+    assert len(rec.atomics) == 10 * 5
+    err = verify_reconstruction(rec)
+    assert err <= 1e-9
+    rows = window_breakdown(rec)
+    assert all("atomic" in r["components"] for r in rows)
+    assert rows[-1]["t_close"] == pytest.approx(drv.clock)
+
+
+def test_gauges_sampled_per_round():
+    rec = Recorder()
+    _drive(recorder=rec, uplink_capacity=5e5, server_concurrency=1)
+    for g in ("server.queue_depth", "downloads.in_flight",
+              "window.pending", "uplink.live_flows",
+              "uplink.utilization"):
+        assert g in rec.gauges, sorted(rec.gauges)
+        assert len(rec.gauges[g]) == 10
+    # utilization is a fraction of capacity
+    assert all(0.0 <= v <= 1.0 + 1e-9
+               for _, v in rec.gauges["uplink.utilization"])
+    assert all(v >= 0 for _, v in rec.gauges["server.queue_depth"])
+
+
+# ---------------------------------------------------------------------------
+# the acceptance property: critical-path reconstruction over randomized
+# resource regimes (seeded numpy — runs without hypothesis)
+# ---------------------------------------------------------------------------
+def test_critical_path_reconstructs_makespan_over_random_regimes():
+    rng = np.random.default_rng(42)
+    checked = 0
+    for trial in range(12):
+        kw = dict(
+            seed=int(rng.integers(0, 1000)),
+            rounds=int(rng.integers(4, 9)),
+            per_round=int(rng.integers(3, 7)),
+            mode=("semi_async", "sync")[int(rng.integers(0, 2))],
+            quorum=float(rng.uniform(0.3, 1.0)),
+            staleness_cap=int(rng.integers(1, 4)),
+            uplink_capacity=(0.0, 2e5, 8e5)[int(rng.integers(0, 3))],
+            downlink_capacity=(0.0, 2e5, 8e5)[int(rng.integers(0, 3))],
+            server_concurrency=int(rng.integers(0, 4)),
+            gate_redispatch=bool(rng.integers(0, 2)),
+            latency=float(rng.uniform(0.0, 0.05)),
+            latency_dist=("constant", "uniform",
+                          "lognormal", "exp")[int(rng.integers(0, 4))],
+        )
+        rec = Recorder()
+        drv = _drive(recorder=rec, **kw)
+        err = verify_reconstruction(rec, rel=1e-6)
+        assert err <= 1e-6, (kw, err)
+        rows = window_breakdown(rec)
+        # every advancing window is attributed to a concrete event
+        for row in rows:
+            if row["makespan"] > 1e-9:
+                assert "unattributed" not in row["components"], (kw, row)
+                checked += 1
+        assert rows[-1]["t_close"] == pytest.approx(drv.clock)
+    assert checked > 40          # the property actually bit
+
+
+def test_summarize_attributes_stragglers():
+    rec = Recorder()
+    _drive(recorder=rec, uplink_capacity=3e5, downlink_capacity=3e5,
+           server_concurrency=2, gate_redispatch=True, latency=0.01,
+           latency_dist="uniform")
+    s = summarize(rec)
+    assert s["windows"] == len(rec.windows)
+    assert s["max_reconstruction_err"] <= 1e-6
+    # fractions sum to 1 over the attributed makespan
+    assert sum(s["fractions"].values()) == pytest.approx(1.0)
+    assert s["top_straggler"] is not None
+    assert s["stragglers"][s["top_straggler"]] >= 1
+    # straggler cids are real devices
+    cids = {d.cid for d in make_device_grid(12, seed=0)}
+    assert set(s["stragglers"]) <= cids
+
+
+# ---------------------------------------------------------------------------
+# export + persistence
+# ---------------------------------------------------------------------------
+def test_chrome_trace_structure_and_roundtrip(tmp_path):
+    rec = Recorder()
+    _drive(recorder=rec, uplink_capacity=5e5, downlink_capacity=5e5,
+           server_concurrency=2, latency=0.01)
+    doc = chrome_trace(rec)
+    assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"devices", "uplink", "server", "downlink"} <= names
+    for e in doc["traceEvents"]:
+        assert e["ph"] in ("X", "M", "C")
+        if e["ph"] == "X":
+            assert math.isfinite(e["ts"]) and e["dur"] >= 0.0
+    # complete spans exist on every resource track
+    pids = {e["pid"] for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert {1, 2, 3, 4} <= pids
+    # the whole document is valid JSON with the recorder dump embedded
+    path = tmp_path / "trace.json"
+    write_chrome_trace(rec, str(path))
+    rec2 = load_recorder(str(path))
+    assert len(rec2.flights) == len(rec.flights)
+    assert len(rec2.windows) == len(rec.windows)
+    assert rec2.counters == pytest.approx(rec.counters)
+    # the round-trip preserves the critical-path math exactly
+    a = [r["components"] for r in window_breakdown(rec)]
+    b = [r["components"] for r in window_breakdown(rec2)]
+    assert a == b
+
+
+def test_recorder_json_tuple_keys_survive():
+    rec = Recorder()
+    rec.flight(0, cid=3, round=0, key=(0, "g"), dispatch=0.0, t_pre=1.0,
+               up_start=1.0, up_bytes=8.0, up_rate=8.0, up_end=2.0,
+               srv_start=2.0, srv_end=3.0, dl_xfer_end=3.5, dl_end=4.0)
+    rec.atomic((1, "h"), 0, [4], 0.0, 2.0)
+    rec.window(0, 0.0, 4.0, {(0, "g"): 0, (1, "h"): 0}, 0)
+    rec2 = Recorder.from_json(json.loads(json.dumps(rec.to_json())))
+    (w,) = rec2.windows
+    assert set(w["committed"]) == {(0, "g"), (1, "h")}
+    assert rec2.flights[0]["key"] == (0, "g")
+    assert rec2.atomics[0]["key"] == (1, "h")
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + streaming sink
+# ---------------------------------------------------------------------------
+def test_metrics_registry_counters_gauges_histograms():
+    m = MetricsRegistry()
+    m.inc("a")
+    m.inc("a", 2.5)
+    m.set_gauge("g", 7.0, t=1.5)
+    for v in (1.0, 2.0, 3.0, 0.0):
+        m.observe("h", v)
+    assert m.counter("a") == pytest.approx(3.5)
+    assert m.counter("missing") == 0.0
+    assert m.gauge("g") == (7.0, 1.5)
+    assert m.gauge("missing") is None
+    snap = m.snapshot()
+    h = snap["histograms"]["h"]
+    assert h["count"] == 4 and h["min"] == 0.0 and h["max"] == 3.0
+    assert h["mean"] == pytest.approx(1.5)
+    assert h["buckets"]["-inf"] == 1      # the zero landed underflow
+    assert sum(h["buckets"].values()) == 4
+    json.dumps(snap)                      # snapshot is JSON-safe
+
+
+def test_recorder_forwards_into_metrics_registry():
+    m = MetricsRegistry()
+    rec = Recorder(metrics=m)
+    _drive(recorder=rec, rounds=4)
+    assert m.counter("driver.rounds") == 4
+    assert m.counter("driver.rounds") == rec.counters["driver.rounds"]
+    g = m.gauge("window.pending")
+    assert g is not None and g[0] == rec.gauges["window.pending"][-1][1]
+
+
+def test_jsonl_sink_streams_one_object_per_line(tmp_path):
+    path = tmp_path / "metrics.jsonl"
+    with JsonlSink(str(path)) as sink:
+        sink.emit({"round": 0, "x": 1.5})
+        sink.emit({"round": 1, "x": 2.5})
+        assert sink.emitted == 2
+        # per-record flush: both lines are on disk before close
+        lines = path.read_text().splitlines()
+        assert len(lines) == 2
+    recs = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert recs[1] == {"round": 1, "x": 2.5}
+    sink.close()                          # idempotent
+
+
+def test_histogram_power_of_two_buckets():
+    h = Histogram()
+    for v in (1.0, 1.5, 2.0, 4.0, 100.0):
+        h.observe(v)
+    d = h.to_dict()
+    assert d["buckets"]["0"] == 2         # [1, 2): 1.0, 1.5
+    assert d["buckets"]["1"] == 1         # [2, 4): 2.0
+    assert d["buckets"]["2"] == 1         # [4, 8): 4.0
+    assert d["buckets"]["6"] == 1         # [64, 128): 100.0
+
+
+# ---------------------------------------------------------------------------
+# channel wire counters
+# ---------------------------------------------------------------------------
+def test_channel_counts_messages_and_bytes_per_direction():
+    import jax.numpy as jnp
+    ch = CommChannel(codec="int8", dispatch_codec="int8")
+    rec = Recorder()
+    ch.recorder = rec
+    x = jnp.ones((4, 16), jnp.float32)
+    ch.uplink_features(0, x)
+    ch.uplink_features(1, x)
+    ch.downlink_grads(0, x)
+    ch.dispatch_leaves(0, [np.ones((3, 3), np.float32)])
+    ch.collect_leaves(0, [np.ones((3, 3), np.float32)])
+    assert rec.counters["comm.up.msgs"] == 2
+    assert rec.counters["comm.down.msgs"] == 1
+    assert rec.counters["comm.disp_down.msgs"] == 1
+    assert rec.counters["comm.disp_up.msgs"] == 1
+    assert rec.counters["comm.up.bytes"] \
+        == pytest.approx(2 * ch._round_up[0])
+    assert rec.counters["comm.up.bytes"] + rec.counters["comm.down.bytes"] \
+        == pytest.approx(ch.up_bytes + ch.down_bytes)
+
+
+# ---------------------------------------------------------------------------
+# engine integration (training-heavy -> slow)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_engine_with_recorder_traces_and_reconstructs(tmp_path):
+    from repro.configs.base import CommConfig, DriverConfig
+    from repro.core.engine import EngineConfig, S2FLEngine
+    from repro.data.partition import federate
+    from repro.data.synthetic import make_image_dataset
+    from repro.models import SplitModel
+    from repro.configs import get_config
+
+    fed = federate(make_image_dataset(200, seed=0), 4, alpha=0.3, seed=0)
+    model = SplitModel(get_config("resnet8"))
+    m = MetricsRegistry()
+    rec = Recorder(metrics=m)
+    ecfg = EngineConfig(
+        mode="s2fl", rounds=3, clients_per_round=3, batch_size=16,
+        comm=CommConfig(latency=0.01, uplink_capacity=2.0e5,
+                        downlink_capacity=2.0e5),
+        driver=DriverConfig(exec_mode="semi_async", pipeline=True,
+                            server_concurrency=2))
+    eng = S2FLEngine(model, fed, ecfg, recorder=rec)
+    seen = []
+    eng.run(on_round=seen.append)
+    assert len(seen) == 3
+    assert rec.flights and rec.windows
+    assert verify_reconstruction(rec) <= 1e-6
+    assert m.counter("comm.up.msgs") > 0          # channel hooks fired
+    path = tmp_path / "engine_trace.json"
+    write_chrome_trace(rec, str(path))
+    assert load_recorder(str(path)).windows
