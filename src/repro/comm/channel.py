@@ -160,6 +160,31 @@ class CommChannel:
     def reset_feedback(self):
         self._residuals = {}
 
+    # ------------------------------------------------------ codec state
+    def _stateful_codecs(self):
+        return (("feature", self.feature_codec),
+                ("grad", self.grad_codec),
+                ("dispatch", self.dispatch_codec))
+
+    def export_codec_state(self) -> dict:
+        """Snapshot the replayable state of any stateful codec (rand-k's
+        per-call counter stream) for checkpoint/resume: restoring it
+        makes every subsequent index draw identical to an uninterrupted
+        run."""
+        return {role: c.state() for role, c in self._stateful_codecs()
+                if hasattr(c, "state")}
+
+    def restore_codec_state(self, state: dict):
+        for role, c in self._stateful_codecs():
+            if role in state and hasattr(c, "set_state"):
+                c.set_state(state[role])
+
+    def reset_codecs(self):
+        """Rewind every stateful codec to the start of its stream."""
+        for _, c in self._stateful_codecs():
+            if hasattr(c, "reset"):
+                c.reset()
+
     # ------------------------------------------------------------ wire
     def _xfer(self, codec, cid, msg, meter, direction):
         """msg: {'h': tensor, ...riders} or bare tensor."""
@@ -192,6 +217,53 @@ class CommChannel:
         self.down_bytes += nbytes
         return out
 
+    # -------------------------------------------------- batched cohort
+    def _xfer_cohort(self, codec, pairs, meter, direction):
+        """One fused call for a cohort flushed together. ``pairs``:
+        [(cid, msg)] in the order the sequential path would have sent
+        them. Metering, recorder counts and residual mutations are the
+        sequential semantics exactly (see comm/fused.py's contract);
+        unsupported codecs or singleton cohorts just loop ``_xfer``."""
+        from repro.comm import fused
+        if not fused.supports(codec) or len(pairs) < 2:
+            return [self._xfer(codec, cid, msg, meter, direction)
+                    for cid, msg in pairs]
+        items = [((direction, cid),
+                  msg["h"] if isinstance(msg, dict) else msg)
+                 for cid, msg in pairs]
+        results = fused.cohort_roundtrip(codec, items, self._residuals,
+                                         self.error_feedback)
+        rec = self.recorder
+        out = []
+        for (cid, msg), (h, nbytes) in zip(pairs, results):
+            if isinstance(msg, dict):
+                nbytes += AUX_BYTES * (len(msg) - 1)
+                out.append((dict(msg, h=h), nbytes))
+            else:
+                out.append((h, nbytes))
+            meter[cid] = meter.get(cid, 0.0) + nbytes
+            if rec is not None and rec.enabled:
+                rec.count(f"comm.{direction}.msgs")
+                rec.count(f"comm.{direction}.bytes", nbytes)
+        return out
+
+    def uplink_features_cohort(self, pairs):
+        """Batched ``uplink_features``: pairs = [(cid, feats)], returns
+        what the server receives for each, in order."""
+        results = self._xfer_cohort(self.feature_codec, pairs,
+                                    self._round_up, "up")
+        for _, nbytes in results:
+            self.up_bytes += nbytes
+        return [out for out, _ in results]
+
+    def downlink_grads_cohort(self, pairs):
+        """Batched ``downlink_grads``: pairs = [(cid, dfx)]."""
+        results = self._xfer_cohort(self.grad_codec, pairs,
+                                    self._round_down, "down")
+        for _, nbytes in results:
+            self.down_bytes += nbytes
+        return [out for out, _ in results]
+
     # ------------------------------------------------------ model legs
     def dispatch_leaves(self, cid, leaves):
         """Server -> device: the Wc dispatch leg (or the FedAvg model
@@ -207,6 +279,51 @@ class CommChannel:
         QSGD-style update upload)."""
         return self._model_leg(cid, leaves, "disp_up",
                                self._round_disp_up)
+
+    def dispatch_leaves_cohort(self, pairs):
+        """Batched Wc dispatch: pairs = [(cid, leaves)], one fused call
+        for the whole cohort's client portions (leaves flattened in
+        (cid, leaf-index) order — the sequential transfer order)."""
+        return self._model_leg_cohort(pairs, "disp_down",
+                                      self._round_disp_down)
+
+    def collect_leaves_cohort(self, pairs):
+        """Batched updated-Wc collect leg."""
+        return self._model_leg_cohort(pairs, "disp_up",
+                                      self._round_disp_up)
+
+    def _model_leg_cohort(self, pairs, direction, meter):
+        if self.dispatch_passthrough:
+            return [list(leaves) for _, leaves in pairs]
+        from repro.comm import fused
+        if not fused.supports(self.dispatch_codec) or len(pairs) < 2:
+            return [self._model_leg(cid, leaves, direction, meter)
+                    for cid, leaves in pairs]
+        items = [((direction, cid, i), x)
+                 for cid, leaves in pairs
+                 for i, x in enumerate(leaves)]
+        results = fused.cohort_roundtrip(self.dispatch_codec, items,
+                                         self._residuals,
+                                         self.error_feedback)
+        rec = self.recorder
+        outs, pos = [], 0
+        for cid, leaves in pairs:
+            ys, nbytes = [], 0.0
+            for _ in leaves:
+                y, b = results[pos]
+                pos += 1
+                ys.append(y)
+                nbytes += b
+            meter[cid] = meter.get(cid, 0.0) + nbytes
+            if direction == "disp_down":
+                self.disp_down_bytes += nbytes
+            else:
+                self.disp_up_bytes += nbytes
+            if rec is not None and rec.enabled:
+                rec.count(f"comm.{direction}.msgs")
+                rec.count(f"comm.{direction}.bytes", nbytes)
+            outs.append(ys)
+        return outs
 
     def _model_leg(self, cid, leaves, direction, meter):
         if self.dispatch_passthrough:

@@ -195,13 +195,36 @@ class RandomKCodec(SparseCodec):
         self.unbiased = unbiased
         self._calls = 0
 
-    def _select(self, flat, k):
+    def draw_indices(self, n: int, k: int):
+        """Advance the per-call counter and draw this call's survivor
+        indices (host-side numpy). Exposed so the batched cohort path
+        can consume the SAME counter stream in the same order as the
+        sequential per-tensor path — one draw per tensor either way, so
+        a run's index masks are identical whichever path carried it."""
         self._calls += 1
         rng = np.random.default_rng((self.seed, self._calls))
-        return jnp.asarray(rng.choice(flat.size, size=k, replace=False))
+        return rng.choice(n, size=k, replace=False)
+
+    def _select(self, flat, k):
+        return jnp.asarray(self.draw_indices(flat.size, k))
 
     def _scale(self, k, n):
         return n / k if self.unbiased else 1.0
+
+    # ------------------------------------------------- replayable state
+    def state(self) -> dict:
+        """Checkpointable RNG-stream position: restoring (seed, calls)
+        and replaying makes every subsequent index draw identical."""
+        return {"seed": self.seed, "calls": self._calls}
+
+    def set_state(self, state: dict):
+        self.seed = state["seed"]
+        self._calls = int(state["calls"])
+
+    def reset(self):
+        """Rewind the call counter to the start of the stream (a fresh
+        run from the same seed)."""
+        self._calls = 0
 
 
 _CODECS = {

@@ -37,6 +37,22 @@ from repro.optim import sgd
 from repro.utils import flops as flops_util
 
 
+def _tree_stack(trees):
+    """Stack a list of same-structure pytrees leaf-wise: (…)->(G, …)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _tree_index(tree, i):
+    """Leaf-wise slice of a stacked pytree: (G, …)[i] -> (…)."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def _donate(*argnums):
+    """jax ignores buffer donation on CPU (one warning per call site) —
+    donate only on accelerator backends."""
+    return argnums if jax.default_backend() != "cpu" else ()
+
+
 @dataclasses.dataclass
 class EngineConfig:
     mode: str = "s2fl"            # 's2fl' | 'sfl' | 'fedavg'
@@ -60,6 +76,14 @@ class EngineConfig:
     # round-loop execution: sync barrier vs semi-async event queue, and
     # predictive (link-forecasting) split selection — core/README.md
     driver: DriverConfig = dataclasses.field(default_factory=DriverConfig)
+    # batched hot path (both default off: the seed path stays bit-exact).
+    # fused_comm flushes each direction's whole cohort through ONE
+    # jitted, donated call (comm/fused.py) — bytes metered bit-equal,
+    # tensors ≤1e-6 vs the sequential chain. fused_server stacks
+    # same-signature concurrent groups into one vmapped, donated server
+    # step (losses/params may drift ~1e-4 from batched-kernel numerics).
+    fused_comm: bool = False
+    fused_server: bool = False
 
 
 class S2FLEngine:
@@ -193,6 +217,34 @@ class S2FLEngine:
             out = set_subtree(out, p, sub)
         return out
 
+    def _wc_leg_cohort(self, cids, params_map, splits, leg):
+        """Batched ``_wc_leg``: the whole cohort's client portions cross
+        the model leg in one fused call (leaves flattened in (cid,
+        leaf-index) order — the sequential transfer order, so rand-k
+        draw streams and residual keys are identical)."""
+        if self.channel.dispatch_passthrough:
+            return {c: params_map[c] for c in cids}
+        from repro.utils.tree import get_subtree, set_subtree
+        pairs, meta = [], []
+        for c in cids:
+            names = self.model.client_segments(splits[c])
+            paths = [p for n, p in self.model.segments() if n in names]
+            subs = [get_subtree(params_map[c], p) for p in paths]
+            leaves, treedef = jax.tree.flatten(subs)
+            pairs.append((c, leaves))
+            meta.append((c, paths, treedef))
+        fn = (self.channel.dispatch_leaves_cohort if leg == "dispatch"
+              else self.channel.collect_leaves_cohort)
+        outs = fn(pairs)
+        result = {}
+        for (c, paths, treedef), new_leaves in zip(meta, outs):
+            new = jax.tree.unflatten(treedef, new_leaves)
+            out = params_map[c]
+            for p, sub in zip(paths, new):
+                out = set_subtree(out, p, sub)
+            result[c] = out
+        return result
+
     def _with_dispatch_report(self, report, participants):
         """Attach the metered model-leg bytes to the driver report. On
         the fp32 passthrough nothing was metered and the keys stay
@@ -243,6 +295,40 @@ class S2FLEngine:
             self._server_step[splits] = jax.jit(step)
         return self._server_step[splits]
 
+    def _get_multi_server_step(self, gsplits):
+        """Batched dual of ``_get_server_step``: every concurrent group
+        with the same signature (member splits + feature/batch shapes)
+        rides ONE jitted call — the per-group loss/backward/SGD-update
+        vmapped over a stacked (G, …) server-copy pytree, with the
+        stacked copies donated so the update happens in place on
+        accelerators. Returns fn (sp_stack, feats_stacks,
+        batches_stacks) -> (new_sp_stack, losses (G,), dfx_stacks)."""
+        key = ("multi", gsplits)
+        if key not in self._server_step:
+            m = self.model
+            lr = self.ecfg.lr
+
+            def loss_fn(sp, feats_list, batches):
+                losses = []
+                for s, f, b in zip(gsplits, feats_list, batches):
+                    l, _ = m.server_loss(sp, f, b, s)
+                    losses.append(l)
+                return jnp.sum(jnp.stack(losses))
+
+            def one(sp, feats_list, batches):
+                val, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+                    sp, feats_list, batches)
+                # Eq.-4 Ws update folded into the same jitted program —
+                # sgrads never leave the device
+                new_sp = jax.tree.map(
+                    lambda w, g: (w - lr * g.astype(w.dtype)
+                                  ).astype(w.dtype), sp, grads[0])
+                return new_sp, val, grads[1]
+
+            self._server_step[key] = jax.jit(jax.vmap(one),
+                                             donate_argnums=_donate(0))
+        return self._server_step[key]
+
     def _get_client_update(self, split):
         """vjp through client_forward with cotangent dfx; SGD update."""
         if split not in self._client_upd:
@@ -259,6 +345,95 @@ class S2FLEngine:
 
             self._client_upd[split] = jax.jit(upd)
         return self._client_upd[split]
+
+    # ------------------------------------------------- fused local step
+    def _local_step_fused(self, groups, splits, server_copies,
+                          client_params):
+        """One local step with the batched hot paths: cohort the uplink
+        and downlink through ONE fused call per direction
+        (``fused_comm``) and stack same-signature concurrent groups'
+        server backwards into one vmapped, donated step
+        (``fused_server``). Batch sampling, wire transfers and loss
+        recording all happen in the sequential path's order, so RNG
+        streams, rand-k draw counters, residual keys and every byte
+        metered are identical to the per-device loop; delivered tensors
+        match ≤1e-6 and vmapped numerics may drift ~1e-4. Returns the
+        per-group losses in group order; mutates server_copies /
+        client_params in place."""
+        ecfg = self.ecfg
+        # 1. draw batches group-major — the sequential RNG call order
+        batches_by_g = [[self._sample_batch(c) for c in group]
+                        for group in groups]
+        fwd = {}
+        for gi, group in enumerate(groups):
+            for c, b in zip(group, batches_by_g[gi]):
+                fwd[c] = self._get_client_fwd(splits[c])(
+                    client_params[c], b)
+        # 2. step 4 — the whole cohort's features cross the uplink at
+        # once (one fused call; bytes metered per device, bit-equal)
+        if ecfg.fused_comm:
+            rx = iter(self.channel.uplink_features_cohort(
+                [(c, fwd[c]) for group in groups for c in group]))
+            feats_by_g = [[next(rx) for _ in group] for group in groups]
+        else:
+            feats_by_g = [[self.channel.uplink_features(c, fwd[c])
+                           for c in group] for group in groups]
+        # 3. steps 5/6 — server backwards, bucketed by signature and
+        # vmapped when batching is on
+        losses = [None] * len(groups)
+        dfx_by_g = [None] * len(groups)
+
+        def seq_step(gi, group):
+            gsplits = tuple(splits[c] for c in group)
+            loss, sgrads, dfxs = self._get_server_step(gsplits)(
+                server_copies[gi], feats_by_g[gi], batches_by_g[gi])
+            server_copies[gi] = jax.tree.map(
+                lambda w, g: (w - ecfg.lr * g.astype(w.dtype)
+                              ).astype(w.dtype), server_copies[gi],
+                sgrads)
+            losses[gi], dfx_by_g[gi] = float(loss), dfxs
+
+        if ecfg.fused_server:
+            buckets = {}
+            for gi, group in enumerate(groups):
+                payload = (feats_by_g[gi], batches_by_g[gi])
+                sig = (tuple(splits[c] for c in group),
+                       jax.tree.structure(payload),
+                       tuple((tuple(x.shape), str(x.dtype))
+                             for x in jax.tree.leaves(payload)))
+                buckets.setdefault(sig, []).append(gi)
+            for (gsplits, _, _), gis in buckets.items():
+                if len(gis) == 1:          # nothing to batch with
+                    seq_step(gis[0], groups[gis[0]])
+                    continue
+                new_sp, vals, dfx_stack = self._get_multi_server_step(
+                    gsplits)(
+                    _tree_stack([server_copies[gi] for gi in gis]),
+                    _tree_stack([feats_by_g[gi] for gi in gis]),
+                    _tree_stack([batches_by_g[gi] for gi in gis]))
+                for j, gi in enumerate(gis):
+                    server_copies[gi] = _tree_index(new_sp, j)
+                    dfx_by_g[gi] = _tree_index(dfx_stack, j)
+                    losses[gi] = float(vals[j])
+        else:
+            for gi, group in enumerate(groups):
+                seq_step(gi, groups[gi])
+        # 4. steps 7/8 — dfx back over the downlink (cohort flush), then
+        # per-device Wc updates
+        if ecfg.fused_comm:
+            rx = iter(self.channel.downlink_grads_cohort(
+                [(c, dfx) for gi, group in enumerate(groups)
+                 for c, dfx in zip(group, dfx_by_g[gi])]))
+            dfx_by_g = [[next(rx) for _ in group] for group in groups]
+        else:
+            dfx_by_g = [[self.channel.downlink_grads(c, dfx)
+                         for c, dfx in zip(group, dfx_by_g[gi])]
+                        for gi, group in enumerate(groups)]
+        for gi, group in enumerate(groups):
+            for c, b, dfx in zip(group, batches_by_g[gi], dfx_by_g[gi]):
+                client_params[c] = self._get_client_update(splits[c])(
+                    client_params[c], b, dfx)
+        return losses
 
     # ------------------------------------------------------------- rounds
     def run_round(self):
@@ -291,10 +466,22 @@ class S2FLEngine:
             self.channel.reset_round()
             # Steps 1/2: Wc crosses the downlink through the dispatch
             # codec (passthrough when fp32: lossless)
-            client_params = {c: self._wc_leg(c, self.params, splits[c],
-                                            "dispatch")
-                             for c in participants}
+            if ecfg.fused_comm:
+                client_params = self._wc_leg_cohort(
+                    participants, {c: self.params for c in participants},
+                    splits, "dispatch")
+            else:
+                client_params = {c: self._wc_leg(c, self.params,
+                                                 splits[c], "dispatch")
+                                 for c in participants}
+            fused = ecfg.fused_comm or ecfg.fused_server
             for step_i in range(ecfg.local_steps):
+                if fused:
+                    step_losses = self._local_step_fused(
+                        groups, splits, server_copies, client_params)
+                    if step_i == ecfg.local_steps - 1:
+                        group_losses.extend(step_losses)
+                    continue
                 for gi, group in enumerate(groups):
                     batches = [self._sample_batch(c) for c in group]
                     # Step 4: features cross the uplink (codec
@@ -321,9 +508,13 @@ class S2FLEngine:
 
             # step 8.5: the trained Wc rides back over the collect leg
             # (codec round-trip + exact metering, passthrough on fp32)
-            for c in participants:
-                client_params[c] = self._wc_leg(c, client_params[c],
-                                                splits[c], "collect")
+            if ecfg.fused_comm:
+                client_params = self._wc_leg_cohort(
+                    participants, client_params, splits, "collect")
+            else:
+                for c in participants:
+                    client_params[c] = self._wc_leg(c, client_params[c],
+                                                    splits[c], "collect")
 
             # hand the driver commit-granularity work items: one per
             # group, held here until its completion event lands

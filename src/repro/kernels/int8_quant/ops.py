@@ -26,7 +26,11 @@ _USE_KERNEL = None
 _INTERPRET = None
 
 
-def _kernel_enabled() -> bool:
+def kernel_enabled() -> bool:
+    """True when the comm hot path should run the real Pallas kernels:
+    TPU by default, or forced either way via REPRO_COMM_KERNEL=1/0.
+    Shared by every comm kernel module (int8_quant, comm_fused) so one
+    env var governs the whole compression path."""
     global _USE_KERNEL
     if _USE_KERNEL is None:
         env = os.environ.get("REPRO_COMM_KERNEL", "")
@@ -36,7 +40,7 @@ def _kernel_enabled() -> bool:
     return _USE_KERNEL
 
 
-def _interpret() -> bool:
+def interpret_mode() -> bool:
     """Compiled Pallas on TPU, interpreter elsewhere (unless forced) —
     otherwise default env vars would run interpret-mode Pallas in the
     per-step training hot path on TPU, the slowest option."""
@@ -46,6 +50,11 @@ def _interpret() -> bool:
         _INTERPRET = (env == "1" if env
                       else jax.default_backend() != "tpu")
     return _INTERPRET
+
+
+# original (private) names, kept for existing callers
+_kernel_enabled = kernel_enabled
+_interpret = interpret_mode
 
 
 GROUP = 256                     # values per scale/zp pair (8 B / 256 B)

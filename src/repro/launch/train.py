@@ -143,6 +143,15 @@ def main(argv=None):
                     help="max concurrent group backwards on the Main "
                          "Server GPU (FIFO queue; 0 = unbounded); only "
                          "observable under --pipeline")
+    ap.add_argument("--fused-comm", action="store_true",
+                    help="flush each direction's whole cohort through "
+                         "one fused jitted call (comm/fused.py): bytes "
+                         "metered bit-equal to the sequential path, "
+                         "tensors within 1e-6")
+    ap.add_argument("--fused-server", action="store_true",
+                    help="stack same-signature concurrent groups' "
+                         "server backwards into one vmapped, donated "
+                         "step (numerics may drift ~1e-4)")
     ap.add_argument("--gate-redispatch", action="store_true",
                     help="a device waits out its own draining download "
                          "before its next upload may start (off = the "
@@ -181,7 +190,8 @@ def main(argv=None):
         clients_per_round=args.per_round, batch_size=args.batch_size,
         local_steps=args.local_steps, lr=args.lr, seed=args.seed,
         use_balance=not args.no_balance, use_sliding=not args.no_sliding,
-        n_classes=n_classes, comm=ccfg, driver=dcfg)
+        n_classes=n_classes, comm=ccfg, driver=dcfg,
+        fused_comm=args.fused_comm, fused_server=args.fused_server)
     # observability: one recorder feeds the driver's flight/window
     # hooks, the channel's wire counters, and (when streaming) the live
     # metrics registry — absent flags, nothing is built and every hook

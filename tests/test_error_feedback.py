@@ -179,13 +179,18 @@ def test_ef_off_is_stateless():
 # (sparsifiers, error feedback, dispatch codec) landed: resnet8 S²FL,
 # 240 samples / 6 clients / alpha=0.3 / seed 0, 3 rounds of 4 clients,
 # batch 16, group 2, default plan; FedAvg same data, 2 rounds.
+# Param sums / loss tails are environment-sensitive at the last float
+# digits (XLA version / CPU instruction selection), so the constants are
+# recaptured by re-running the pre-compression commit (30d2ac9) in the
+# CURRENT environment — the invariant tested is engine-vs-engine
+# bit-exactness, not stability of XLA numerics across toolchains.
 GOLDEN_S2FL = dict(clock=1.67794774976, comm=21778016.0,
-                   param_sum=246.27124186104606,
+                   param_sum=246.27124887085165,
                    losses=[2.5106738805770874, 2.3420581817626953,
-                           2.287154197692871])
+                           2.28715443611145])
 GOLDEN_FEDAVG = dict(clock=0.76929696, comm=4982400.0,
-                     param_sum=246.3688663195759,
-                     losses=[2.482684850692749, 2.3446030616760254])
+                     param_sum=246.36886466104056,
+                     losses=[2.482684850692749, 2.34460312128067])
 
 
 def _golden_engine(mode, rounds, comm=None):
