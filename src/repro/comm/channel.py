@@ -119,6 +119,10 @@ class CommChannel:
         self._round_disp_up = {}     # cid -> collect-leg bytes this round
         self._round_disp_down = {}   # cid -> dispatch-leg bytes
         self._residuals = {}         # (direction, cid[, leaf]) -> tensor
+        # fault injection: a killed device's residuals sit here until it
+        # rejoins (restored) or forever (discarded, with metered mass)
+        self._quarantine = {}        # cid -> {residual key: tensor}
+        self.ef_discarded_mass = 0.0  # L2 mass of discarded residuals
         # observability: an observe.TraceRecorder injected by the
         # engine/caller (None or disabled = zero overhead — the wire
         # hooks guard before touching it)
@@ -160,6 +164,42 @@ class CommChannel:
     def reset_feedback(self):
         self._residuals = {}
 
+    # ------------------------------------------- residual fault handling
+    def quarantine_residuals(self, cid):
+        """A device died: move every feedback accumulator it owns out of
+        the live set (its next transfer — if it ever rejoins — must not
+        re-inject error from its dead incarnation until the plan's
+        residual policy decides). Residual keys are (direction, cid[,
+        leaf]); everything keyed to ``cid`` moves. Idempotent per kill:
+        a second quarantine before release merges into the held set."""
+        moved = {k: v for k, v in self._residuals.items() if k[1] == cid}
+        if moved:
+            for k in moved:
+                del self._residuals[k]
+            self._quarantine.setdefault(cid, {}).update(moved)
+
+    def release_residuals(self, cid, *, restore: bool = True):
+        """The device rejoined. ``restore=True`` puts its quarantined
+        accumulators back live (compression error from the dead
+        incarnation is compensated as if nothing happened — valid
+        because the residual is additive error state, not model state);
+        ``restore=False`` discards them, metering the dropped L2 mass
+        in ``ef_discarded_mass`` so the loss is observable, not silent.
+        A device with nothing quarantined is a no-op."""
+        held = self._quarantine.pop(cid, None)
+        if not held:
+            return
+        if restore:
+            # live state under the same key wins: the rejoined device
+            # may already have fresh residuals from its new incarnation
+            for k, v in held.items():
+                self._residuals.setdefault(k, v)
+        else:
+            import jax.numpy as jnp
+            self.ef_discarded_mass += float(
+                sum(jnp.sum(jnp.asarray(r, jnp.float32) ** 2) ** 0.5
+                    for r in held.values()))
+
     # ------------------------------------------------------ codec state
     def _stateful_codecs(self):
         return (("feature", self.feature_codec),
@@ -184,6 +224,65 @@ class CommChannel:
         for _, c in self._stateful_codecs():
             if hasattr(c, "reset"):
                 c.reset()
+
+    # ------------------------------------------------- checkpoint state
+    def export_state(self) -> dict:
+        """JSON-safe channel state for full-run checkpoints: cumulative
+        byte meters, the simulated round the latency sampler keys on,
+        discarded-residual mass, and every stateful codec's stream
+        position. Residual TENSORS travel separately (they are arrays —
+        see ``export_residual_state``); config knobs are reconstructed
+        by the caller."""
+        return {"sim_round": self.sim_round,
+                "up_bytes": self.up_bytes,
+                "down_bytes": self.down_bytes,
+                "disp_up_bytes": self.disp_up_bytes,
+                "disp_down_bytes": self.disp_down_bytes,
+                "ef_discarded_mass": self.ef_discarded_mass,
+                "codecs": self.export_codec_state()}
+
+    def restore_state(self, st: dict):
+        self.sim_round = int(st["sim_round"])
+        self.up_bytes = float(st["up_bytes"])
+        self.down_bytes = float(st["down_bytes"])
+        self.disp_up_bytes = float(st["disp_up_bytes"])
+        self.disp_down_bytes = float(st["disp_down_bytes"])
+        self.ef_discarded_mass = float(st["ef_discarded_mass"])
+        self.restore_codec_state(st.get("codecs", {}))
+
+    def export_residual_state(self) -> dict:
+        """Flatten live + quarantined feedback accumulators to a
+        {string name: array} dict an ``.npz`` can hold: live keys become
+        ``"r:" + json([direction, cid, leaf?])``, quarantined ones
+        ``"q:" + json([cid, [direction, cid, leaf?]])`` (np-integer cids
+        coerced to plain ints — they hash/compare equal on restore)."""
+        import json
+
+        def _py(o):
+            return o.item() if hasattr(o, "item") else o
+
+        out = {}
+        for k, v in self._residuals.items():
+            out["r:" + json.dumps([_py(p) for p in k])] = v
+        for cid, held in self._quarantine.items():
+            for k, v in held.items():
+                out["q:" + json.dumps([_py(cid),
+                                       [_py(p) for p in k]])] = v
+        return out
+
+    def restore_residual_state(self, flat: dict):
+        import json
+        self._residuals = {}
+        self._quarantine = {}
+        for name, v in flat.items():
+            tag, payload = name[:2], json.loads(name[2:])
+            if tag == "r:":
+                self._residuals[tuple(payload)] = v
+            elif tag == "q:":
+                cid, key = payload
+                self._quarantine.setdefault(cid, {})[tuple(key)] = v
+            else:
+                raise ValueError(f"unknown residual entry {name!r}")
 
     # ------------------------------------------------------------ wire
     def _xfer(self, codec, cid, msg, meter, direction):

@@ -321,6 +321,7 @@ class FluidLink:
         self._finish_cache: dict = {}  # retired fid -> finish
         self.n_solves = 0              # fluid re-solve calls (telemetry)
         self.n_retired = 0             # flows retired by compact()
+        self.abandoned_bytes = 0.0     # undelivered bytes of killed flows
 
     def __len__(self):
         return len(self._arrive)
@@ -345,6 +346,30 @@ class FluidLink:
 
     def set_arrival(self, fid: int, arrival: float):
         self._arrive[fid] = float(arrival)
+
+    def abandon(self, fid: int, t: float) -> float:
+        """Tear down flow ``fid`` at time ``t`` (its device died): bytes
+        already drained stay drained, the undelivered remainder is
+        dropped and metered under ``abandoned_bytes``. Returns the bytes
+        abandoned.
+
+        Truncating the flow's size to exactly what it had drained by
+        ``t`` leaves every survivor's schedule before ``t`` unchanged
+        (the active sets — and hence the max-min rates — are identical
+        up to the instant the flow empties), makes the abandoned flow
+        finish exactly at ``t``, and releases its capacity share from
+        that instant on: survivors can only speed up. A flow that never
+        started (arrival > t) is dropped whole and lands empty at its
+        arrival, contending with nothing. Already-finished or retired
+        flows are a no-op."""
+        if fid in self._finish_cache:
+            return 0.0                 # retired: fully drained long ago
+        rem = self.remaining_at(t)[fid]
+        if rem <= 0.0:
+            return 0.0                 # delivered before the kill
+        self._bytes[fid] -= rem
+        self.abandoned_bytes += rem
+        return rem
 
     def solve(self):
         """Finish times of ALL flows (retired ones from the cache),
@@ -402,6 +427,38 @@ class FluidLink:
             return 0.0
         drained = sum(self.remaining_at(t0)) - sum(self.remaining_at(t1))
         return max(0.0, drained) / (self.capacity * (t1 - t0))
+
+    # ------------------------------------------------ checkpoint state
+    def export_state(self) -> dict:
+        """JSON-serializable snapshot of every flow (including retired
+        history) — restoring it reproduces each subsequent solve()
+        bit-exactly (Python floats round-trip exactly through repr-based
+        JSON, and the fluid schedule is a deterministic function of the
+        flow table)."""
+        return {"capacity": self.capacity,
+                "arrive": list(self._arrive),
+                "bytes": list(self._bytes),
+                "caps": list(self._caps),
+                "live": list(self._live),
+                "finish_cache": [[f, fin] for f, fin
+                                 in sorted(self._finish_cache.items())],
+                "n_solves": self.n_solves,
+                "n_retired": self.n_retired,
+                "abandoned_bytes": self.abandoned_bytes}
+
+    @classmethod
+    def from_state(cls, st: dict) -> "FluidLink":
+        link = cls(st["capacity"])
+        link._arrive = [float(x) for x in st["arrive"]]
+        link._bytes = [float(x) for x in st["bytes"]]
+        link._caps = [float(x) for x in st["caps"]]
+        link._live = [int(f) for f in st["live"]]
+        link._finish_cache = {int(f): float(fin)
+                              for f, fin in st["finish_cache"]}
+        link.n_solves = int(st["n_solves"])
+        link.n_retired = int(st["n_retired"])
+        link.abandoned_bytes = float(st["abandoned_bytes"])
+        return link
 
 
 # ---------------------------------------------------------------------------

@@ -402,6 +402,12 @@ class RoundResult:
     #                              # {cid: {'up','srv','down'} durations}
     #                              # (pipelined rounds only)
     downloads: int = 0             # download events still draining
+    abandoned: tuple = ()          # work keys torn down by kills this
+    #                              # round (fault injection only) — a
+    #                              # dispatched key lands in exactly one
+    #                              # of committed/abandoned, ever
+    killed: tuple = ()             # cids killed this round
+    rejoined: tuple = ()           # cids rejoined before this round
 
 
 @dataclasses.dataclass(order=True)
@@ -472,6 +478,28 @@ class _ServerQueue:
                 self._finish_cache[j] = fins[j]
             self._live = kept
 
+    def cancel(self, jid: int, t: float) -> bool:
+        """Tear down job ``jid`` at time ``t`` (its device died). A job
+        still WAITING at ``t`` leaves the queue entirely (its FIFO
+        position frees for the jobs behind it); a RUNNING job has its
+        duration truncated so its slot frees at the kill instant — the
+        schedule before ``t`` is history and stays untouched. A job
+        already finished (or retired) is a no-op. Returns True when the
+        job was actually cancelled."""
+        if jid in self._finish_cache:
+            return False
+        fins = self.solve()
+        if fins[jid] <= t:
+            return False               # finished before the kill
+        start = fins[jid] - self._dur[jid]
+        if start >= t:
+            # never started: drop it from the schedule outright
+            self._live.remove(jid)
+            self._finish_cache[jid] = t
+            return True
+        self._dur[jid] = t - start
+        return True
+
     def depth_at(self, t: float) -> int:
         """Jobs arrived but unfinished at ``t`` (waiting + running) —
         the queue-depth gauge the TraceRecorder samples. Observational
@@ -479,6 +507,25 @@ class _ServerQueue:
         fins = self.solve()
         return sum(1 for i in self._live
                    if self._arrive[i] <= t < fins[i])
+
+    # ------------------------------------------------ checkpoint state
+    def export_state(self) -> dict:
+        return {"slots": self.slots,
+                "arrive": list(self._arrive),
+                "dur": list(self._dur),
+                "live": list(self._live),
+                "finish_cache": [[j, fin] for j, fin
+                                 in sorted(self._finish_cache.items())]}
+
+    @classmethod
+    def from_state(cls, st: dict) -> "_ServerQueue":
+        q = cls(st["slots"])
+        q._arrive = [float(x) for x in st["arrive"]]
+        q._dur = [float(x) for x in st["dur"]]
+        q._live = [int(j) for j in st["live"]]
+        q._finish_cache = {int(j): float(fin)
+                           for j, fin in st["finish_cache"]}
+        return q
 
 
 @dataclasses.dataclass
@@ -529,7 +576,8 @@ class RoundDriver:
                  quorum: float = 0.5, predictive: bool = False,
                  pipeline: bool = False, warmup_devices=None,
                  server_concurrency: int = 0,
-                 gate_redispatch: bool = False, recorder=None):
+                 gate_redispatch: bool = False, recorder=None,
+                 fault_plan=None):
         if mode not in EXEC_MODES:
             raise ValueError(f"exec mode {mode!r}; known: {EXEC_MODES}")
         if staleness_cap < 0:
@@ -569,6 +617,17 @@ class RoundDriver:
         self._next_uid = 0
         self._dev_busy: dict = {}       # cid -> latest own download end
         self._round_uids: dict = {}     # this round's cid -> flight uid
+        # fault injection (core/faults.py; None = the no-churn world,
+        # bit-exact with the pre-fault driver)
+        self.fault_plan = fault_plan
+        self._dead: dict = {}           # cid -> round it was killed
+        self._incarnation: dict = {}    # cid -> rejoin count (identity)
+        self._members: dict = {}        # (round, key) -> {cid: commit}
+        self._abandoned_ids: set = set()   # (round, key) torn down
+        self._abandoned_now: list = []  # keys abandoned this run_round
+        self.n_dispatched = 0           # work items pushed, ever
+        self.n_committed = 0            # work items popped & committed
+        self.n_abandoned = 0            # work items torn down by kills
         if predictive:
             if not hasattr(scheduler, "forecast"):
                 raise ValueError(
@@ -602,8 +661,25 @@ class RoundDriver:
         default one work item per participant keyed by cid).
         """
         part = [_cid(p) for p in participants]
-        part_set = set(part)
         clock0 = self.clock
+        # fault plan: rejoins + pre-dispatch kills land before selection
+        # (a dead device is filtered from the cohort; its carried
+        # straggler work is torn down at the current clock); mid-flight
+        # kills are held until this round's dispatch times are solved
+        self._abandoned_now = []
+        mid_kills, killed, rejoined = [], [], []
+        if self.fault_plan is not None:
+            for e in self.fault_plan.for_round(self.round):
+                if e.kind == "rejoin":
+                    if self._rejoin(e.cid):
+                        rejoined.append(e.cid)
+                elif e.at is None:
+                    if self._kill(e.cid, clock0):
+                        killed.append(e.cid)
+                else:
+                    mid_kills.append(e)
+            part = [c for c in part if c not in self._dead]
+        part_set = set(part)
         self._load = max(1, len(part))
         # per-(device, round) latency draws key on the round index
         ch = getattr(self.cost, "channel", None)
@@ -616,7 +692,7 @@ class RoundDriver:
         if getattr(self.scheduler, "warming_up", False):
             s = self.scheduler.warmup_split()
             for d in self.warmup_devices:
-                if _cid(d) in part_set:
+                if _cid(d) in part_set or _cid(d) in self._dead:
                     continue
                 t, _ = self.cost.time_and_bytes(d, s, clock0)
                 self.scheduler.observe(_cid(d), s, t)
@@ -666,7 +742,32 @@ class RoundDriver:
                     uid = self._round_uids.get(c)
                     if uid is not None:
                         self._flights[uid].key = key
-        committed, staleness, new_clock = self._close_window(items, clock0)
+
+        # exactly-once ledger: every fresh work item is dispatched ONCE
+        # here and will land in committed or abandoned, never both,
+        # never twice (commits pop it from the heap; kills remove it
+        # and record its (dispatch-round, key) identity)
+        for key, ready in items.items():
+            self._push(key, ready)
+        self.n_dispatched += len(items)
+        for key, members in groups.items():
+            if members:
+                self._members[(self.round, key)] = {c: commits[c]
+                                                   for c in members}
+
+        # mid-flight kills: the kill instant interpolates between the
+        # dispatch clock and the round's last fresh commit estimate, so
+        # the device dies while its transfers/backwards are in flight
+        if mid_kills:
+            horizon = max(items.values()) if items else clock0
+            for e in mid_kills:
+                t_kill = clock0 + e.at * max(horizon - clock0, 0.0)
+                if self._kill(e.cid, t_kill):
+                    killed.append(e.cid)
+
+        fresh = [r for key, r in items.items()
+                 if (self.round, key) not in self._abandoned_ids]
+        committed, staleness, new_clock = self._close_window(fresh, clock0)
         self._drain_downloads(new_clock)
 
         self.clock = new_clock
@@ -680,9 +781,15 @@ class RoundDriver:
             round_time=new_clock - clock0, comm_bytes=comm, splits=splits,
             times=times, committed=tuple(committed), staleness=staleness,
             pending=len(self._pending), phases=phases,
-            downloads=len(self._downloads))
+            downloads=len(self._downloads),
+            abandoned=tuple(self._abandoned_now),
+            killed=tuple(killed), rejoined=tuple(rejoined))
         self.round += 1
         self._prune_flights()
+        # member maps are only needed while their event pends
+        live = {(e.round, e.key) for e in self._pending}
+        self._members = {k: v for k, v in self._members.items()
+                         if k in live}
         return rec
 
     # ----------------------------------------------------- observability
@@ -915,18 +1022,18 @@ class RoundDriver:
             out.append(heapq.heappop(self._pending))
         return out
 
-    def _close_window(self, items: dict, now: float):
-        """items: {key: absolute commit-ready time}. Returns (committed
-        keys, staleness per key in rounds, new clock)."""
-        for key, ready in items.items():
-            self._push(key, ready)
+    def _close_window(self, fresh_readies, now: float):
+        """``fresh_readies``: this round's surviving work items' ready
+        times (their events are already in the heap — kills may have
+        removed some before the window closes). Returns (committed keys,
+        staleness per key in rounds, new clock)."""
         if self.mode == "sync" or self.staleness_cap == 0:
             # barrier: everything dispatched must land this round
             new_clock = max((e.ready for e in self._pending), default=now)
         elif not self._pending:
             return [], {}, now
         else:
-            fresh = sorted(items.values())
+            fresh = sorted(fresh_readies)
             q = max(1, math.ceil(self.quorum * len(fresh))) if fresh else 0
             t_quorum = fresh[q - 1] if fresh else now
             # any event that would exceed the staleness cap by waiting
@@ -935,11 +1042,101 @@ class RoundDriver:
                       if e.round <= self.round - self.staleness_cap]
             new_clock = max([t_quorum, now] + forced)
         done = self._pop_ready(new_clock)
+        self.n_committed += len(done)
         committed = [e.key for e in done]
         staleness = {e.key: self.round - e.round for e in done}
         assert all(v <= max(self.staleness_cap, 0)
                    for v in staleness.values()), staleness
         return committed, staleness, new_clock
+
+    # --------------------------------------------------- fault injection
+    def _kill(self, cid, t: float) -> bool:
+        """Device ``cid`` dies at simulated time ``t``: its in-flight
+        link flows are abandoned (capacity released at the kill instant,
+        survivor schedules before ``t`` untouched), its server work is
+        cancelled or orphaned per the plan's ``server_policy``, its
+        error-feedback residuals are quarantined on the channel, and
+        every pending work item whose dead member had NOT delivered its
+        contribution by ``t`` is abandoned — recorded under its
+        (dispatch-round, work-key) identity so it can never commit.
+        Returns False when the device was already dead (no-op)."""
+        if cid in self._dead:
+            return False
+        self._dead[cid] = self.round
+        policy = (self.fault_plan.server_policy
+                  if self.fault_plan is not None else "cancel")
+        # 1. tear down the device's in-flight resources (pipeline only)
+        doomed_fl = [fl for fl in self._flights.values() if fl.cid == cid]
+        flight_commit = {}
+        for fl in doomed_fl:
+            flight_commit[(fl.round, fl.key)] = fl.commit
+            up_done = not math.isnan(fl.up_end) and fl.up_end <= t
+            self._uplink.abandon(fl.fid, t)
+            if not up_done or policy == "cancel":
+                # the features never fully arrived, or the policy frees
+                # the slot: the job leaves the queue / truncates at t.
+                # 'orphan' with a fed job lets the backward run to
+                # completion occupying its slot — the result is dropped
+                # with the flight either way.
+                self._srvq.cancel(fl.jid, t)
+            if fl.did is not None:
+                self._downlink.abandon(fl.did, t)
+            del self._flights[fl.uid]
+        if doomed_fl:
+            # the download heap must forget the dead device NOW so a
+            # same-round flush doesn't wait on an abandoned download
+            self._downloads = [(fl.dl_end, fl.uid)
+                               for fl in self._flights.values()]
+            heapq.heapify(self._downloads)
+        # 2. abandon pending work the dead member never delivered: its
+        # own commit (live-flight estimate, else the dispatch record)
+        # past the kill instant means its gradient contribution was
+        # still in flight when it died
+        doomed_ev = []
+        for e in self._pending:
+            mem = self._members.get((e.round, e.key))
+            if mem is None or cid not in mem:
+                continue
+            own = flight_commit.get((e.round, e.key), mem.get(cid))
+            if own is None or math.isnan(own) or own > t:
+                doomed_ev.append(e)
+        if doomed_ev:
+            for e in doomed_ev:
+                self._pending.remove(e)
+                self._abandoned_ids.add((e.round, e.key))
+                self._abandoned_now.append(e.key)
+            self.n_abandoned += len(doomed_ev)
+            heapq.heapify(self._pending)
+        # 3. quarantine the device's error-feedback residuals until it
+        # rejoins (restored or discarded there, per residual_policy)
+        ch = getattr(self.cost, "channel", None)
+        if ch is not None and hasattr(ch, "quarantine_residuals"):
+            ch.quarantine_residuals(cid)
+        if self.recorder is not None and self.recorder.enabled:
+            self.recorder.count("driver.kills")
+            self.recorder.count("driver.abandons", len(doomed_ev))
+        return True
+
+    def _rejoin(self, cid) -> bool:
+        """Device ``cid`` comes back before this round's dispatch under
+        a FRESH identity: its incarnation counter bumps (a later
+        dispatch gets a new (round, key) identity, so nothing stale can
+        double-count), its re-dispatch gate resets, and its quarantined
+        residuals are restored or discarded per ``residual_policy``.
+        Returns False when the device was not dead (no-op)."""
+        if cid not in self._dead:
+            return False
+        del self._dead[cid]
+        self._incarnation[cid] = self._incarnation.get(cid, 0) + 1
+        self._dev_busy.pop(cid, None)
+        ch = getattr(self.cost, "channel", None)
+        if ch is not None and hasattr(ch, "release_residuals"):
+            restore = (self.fault_plan is None
+                       or self.fault_plan.residual_policy == "restore")
+            ch.release_residuals(cid, restore=restore)
+        if self.recorder is not None and self.recorder.enabled:
+            self.recorder.count("driver.rejoins")
+        return True
 
     def flush(self):
         """Wait out every in-flight event (end of training): advances the
@@ -953,6 +1150,7 @@ class RoundDriver:
         clock0 = self.clock
         new_clock = max(ready)
         done = self._pop_ready(new_clock)
+        self.n_committed += len(done)
         self._drain_downloads(new_clock)
         self.clock = max(self.clock, new_clock)
         staleness = {e.key: self.round - 1 - e.round for e in done}
@@ -965,3 +1163,116 @@ class RoundDriver:
                                  kind="flush")
         self._prune_flights()
         return [e.key for e in done], staleness
+
+    # --------------------------------------------------- checkpoint state
+    def export_state(self) -> dict:
+        """Everything the timeline needs to resume bit-exactly on an
+        identically-configured driver: clock/round/ledger scalars, the
+        pending-event and download heaps, live flights (with their
+        frozen PhaseCosts), the stateful links/queue, and the
+        fault-ledger maps. Config (mode, quorum, devices, cost model,
+        fault plan) is NOT serialized — the caller reconstructs it and
+        calls ``restore_state``. JSON-safe: every float survives a
+        json round-trip bit-exactly (repr-based), dict keys are encoded
+        as pair-lists."""
+        def _pc(pc: PhaseCost) -> dict:
+            return dataclasses.asdict(pc)
+
+        flights = []
+        for uid in sorted(self._flights):
+            fl = self._flights[uid]
+            flights.append({
+                "uid": fl.uid, "cid": fl.cid, "round": fl.round,
+                "fid": fl.fid, "jid": fl.jid, "did": fl.did,
+                "key": fl.key, "commit": fl.commit, "dl_end": fl.dl_end,
+                "dispatch": fl.dispatch, "up_end": fl.up_end,
+                "pc": _pc(fl.pc)})
+        st = {
+            "clock": self.clock, "comm": self.comm, "round": self.round,
+            "seq": self._seq, "load": self._load,
+            "next_uid": self._next_uid,
+            "pending": [[e.ready, e.seq, e.round, e.key]
+                        for e in sorted(self._pending,
+                                        key=lambda e: (e.ready, e.seq))],
+            "downloads": sorted(self._downloads),
+            "flights": flights,
+            "dev_busy": sorted(self._dev_busy.items(),
+                               key=lambda kv: str(kv[0])),
+            "uplink": (self._uplink.export_state()
+                       if self._uplink is not None else None),
+            "downlink": (self._downlink.export_state()
+                         if self._downlink is not None else None),
+            "srvq": (self._srvq.export_state()
+                     if self._srvq is not None else None),
+            "members": [[[r, k], sorted(v.items(),
+                                        key=lambda kv: str(kv[0]))]
+                        for (r, k), v in sorted(
+                            self._members.items(),
+                            key=lambda kv: (kv[0][0], str(kv[0][1])))],
+            "dead": sorted(self._dead.items(),
+                           key=lambda kv: str(kv[0])),
+            "incarnation": sorted(self._incarnation.items(),
+                                  key=lambda kv: str(kv[0])),
+            "abandoned_ids": sorted([[r, k] for r, k
+                                     in self._abandoned_ids],
+                                    key=lambda rk: (rk[0], str(rk[1]))),
+            "n_dispatched": self.n_dispatched,
+            "n_committed": self.n_committed,
+            "n_abandoned": self.n_abandoned,
+        }
+        if hasattr(self.scheduler, "export_state"):
+            st["scheduler"] = self.scheduler.export_state()
+        return st
+
+    def restore_state(self, st: dict):
+        """Inverse of ``export_state`` on a freshly-constructed,
+        identically-configured driver. Keys that were tuples before a
+        JSON round-trip come back as lists — re-tupled here so heap
+        membership and ledger identity keep working."""
+        def _key(k):
+            return tuple(k) if isinstance(k, list) else k
+
+        self.clock = float(st["clock"])
+        self.comm = float(st["comm"])
+        self.round = int(st["round"])
+        self._seq = int(st["seq"])
+        self._load = int(st["load"])
+        self._next_uid = int(st["next_uid"])
+        self._pending = [_Event(float(r), int(s), int(rd), _key(k))
+                         for r, s, rd, k in st["pending"]]
+        heapq.heapify(self._pending)
+        self._downloads = [(float(r), int(u)) for r, u in st["downloads"]]
+        heapq.heapify(self._downloads)
+        self._flights = {}
+        for f in st["flights"]:
+            pc = PhaseCost(**{k: (None if v is None else float(v))
+                              for k, v in f["pc"].items()})
+            fl = _Flight(uid=int(f["uid"]), cid=f["cid"],
+                         round=int(f["round"]), fid=int(f["fid"]),
+                         jid=int(f["jid"]), pc=pc,
+                         did=None if f["did"] is None else int(f["did"]),
+                         key=_key(f["key"]),
+                         commit=float(f["commit"]),
+                         dl_end=float(f["dl_end"]),
+                         dispatch=float(f["dispatch"]),
+                         up_end=float(f["up_end"]))
+            self._flights[fl.uid] = fl
+        self._round_uids = {}
+        self._dev_busy = {c: float(t) for c, t in st["dev_busy"]}
+        self._uplink = (FluidLink.from_state(st["uplink"])
+                        if st["uplink"] is not None else None)
+        self._downlink = (FluidLink.from_state(st["downlink"])
+                          if st["downlink"] is not None else None)
+        self._srvq = (_ServerQueue.from_state(st["srvq"])
+                      if st["srvq"] is not None else None)
+        self._members = {(int(r), _key(k)): {c: float(t) for c, t in v}
+                         for (r, k), v in st["members"]}
+        self._dead = {c: int(r) for c, r in st["dead"]}
+        self._incarnation = {c: int(n) for c, n in st["incarnation"]}
+        self._abandoned_ids = {(int(r), _key(k))
+                               for r, k in st["abandoned_ids"]}
+        self.n_dispatched = int(st["n_dispatched"])
+        self.n_committed = int(st["n_committed"])
+        self.n_abandoned = int(st["n_abandoned"])
+        if "scheduler" in st and hasattr(self.scheduler, "restore_state"):
+            self.scheduler.restore_state(st["scheduler"])

@@ -94,7 +94,8 @@ class S2FLEngine:
 
     def __init__(self, model: SplitModel, data: dict, ecfg: EngineConfig,
                  devices: Optional[list] = None,
-                 plan: Optional[SplitPlan] = None, recorder=None):
+                 plan: Optional[SplitPlan] = None, recorder=None,
+                 fault_plan=None):
         self.model = model
         self.data = data
         self.ecfg = ecfg
@@ -147,7 +148,7 @@ class S2FLEngine:
             server_concurrency=getattr(dcfg, "server_concurrency", 0),
             gate_redispatch=getattr(dcfg, "gate_redispatch", False),
             warmup_devices=[d for d in self.devices if d.cid in data],
-            recorder=recorder)
+            recorder=recorder, fault_plan=fault_plan)
         self._held = {}            # gid -> un-committed round results
         self._next_gid = 0
 
@@ -450,16 +451,20 @@ class S2FLEngine:
         group_losses = []              # last local step's per-group losses
 
         def execute(splits):
+            # the driver filters fault-killed devices from the cohort
+            # before selection, so the alive list is exactly splits'
+            # keys (== participants when no fault plan is armed)
+            alive = [c for c in participants if c in splits]
             # Step 5: grouping (Eq. 2) — balance on, else singletons
-            if not participants:
+            if not alive:
                 groups = []
             elif ecfg.mode == "s2fl" and ecfg.use_balance:
                 groups = greedy_groups(
-                    [self._hists[c] for c in participants],
+                    [self._hists[c] for c in alive],
                     ecfg.group_size)
-                groups = [tuple(participants[i] for i in g) for g in groups]
+                groups = [tuple(alive[i] for i in g) for g in groups]
             else:
-                groups = [(c,) for c in participants]
+                groups = [(c,) for c in alive]
 
             server_copies = {gi: self.params for gi in range(len(groups))}
 
@@ -468,12 +473,12 @@ class S2FLEngine:
             # codec (passthrough when fp32: lossless)
             if ecfg.fused_comm:
                 client_params = self._wc_leg_cohort(
-                    participants, {c: self.params for c in participants},
+                    alive, {c: self.params for c in alive},
                     splits, "dispatch")
             else:
                 client_params = {c: self._wc_leg(c, self.params,
                                                  splits[c], "dispatch")
-                                 for c in participants}
+                                 for c in alive}
             fused = ecfg.fused_comm or ecfg.fused_server
             for step_i in range(ecfg.local_steps):
                 if fused:
@@ -510,9 +515,9 @@ class S2FLEngine:
             # (codec round-trip + exact metering, passthrough on fp32)
             if ecfg.fused_comm:
                 client_params = self._wc_leg_cohort(
-                    participants, client_params, splits, "collect")
+                    alive, client_params, splits, "collect")
             else:
-                for c in participants:
+                for c in alive:
                     client_params[c] = self._wc_leg(c, client_params[c],
                                                     splits[c], "collect")
 
@@ -531,25 +536,29 @@ class S2FLEngine:
             # per-direction byte split: the pipelined timeline prices the
             # metered uplink (features) and downlink (dfx) separately
             per_dir = {c: self.channel.round_payload_split(c)
-                       for c in participants}
+                       for c in alive}
             return self._with_dispatch_report(
                 {"groups": keyed,
                  "payload_bytes": {c: self.channel.round_payload(c)
-                                   for c in participants},
+                                   for c in alive},
                  "payload_up_bytes": {c: per_dir[c][0]
-                                      for c in participants},
+                                      for c in alive},
                  "payload_down_bytes": {c: per_dir[c][1]
-                                        for c in participants}},
-                participants)
+                                        for c in alive}},
+                alive)
 
         rec = self.driver.run_round(participants, execute=execute)
+        # a kill abandoned these work items: drop their held state (the
+        # driver guarantees their commit events can never fire)
+        for gid in rec.abandoned:
+            self._held.pop(gid, None)
         self._commit(rec.committed)
 
         # Eq.-3 group losses are SUMS over members, so divide the total
-        # by the participant count: a per-client mean comparable across
-        # group sizes and with the FedAvg curve; nan when no training
-        # happened (local_steps == 0 or no participants)
-        loss = (float(np.sum(group_losses)) / len(participants)
+        # by the (alive) participant count: a per-client mean comparable
+        # across group sizes and with the FedAvg curve; nan when no
+        # training happened (local_steps == 0 or no participants)
+        loss = (float(np.sum(group_losses)) / max(len(rec.splits), 1)
                 if group_losses else float("nan"))
         return self._record(loss, rec)
 
@@ -571,9 +580,10 @@ class S2FLEngine:
         losses = []
 
         def execute(splits):
+            alive = [c for c in participants if c in splits]
             self.channel.reset_round()
             keyed = {}
-            for c in participants:
+            for c in alive:
                 # broadcast leg: W reaches the client through the
                 # dispatch codec (passthrough on fp32: lossless)
                 rx = self._fedavg_broadcast(c)
@@ -591,9 +601,11 @@ class S2FLEngine:
                 keyed[gid] = (c,)
                 self._held[gid] = (p, self._data_size(c))
             return self._with_dispatch_report({"groups": keyed},
-                                              participants)
+                                              alive)
 
         rec = self.driver.run_round(participants, execute=execute)
+        for gid in rec.abandoned:
+            self._held.pop(gid, None)
         self._commit(rec.committed)
         # mean over participating clients (not the last client's)
         loss = float(np.mean(losses)) if losses else float("nan")

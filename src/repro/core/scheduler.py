@@ -109,6 +109,20 @@ class SlidingSplitScheduler:
     def end_round(self):
         self.round += 1
 
+    # ------------------------------------------------- checkpoint state
+    def export_state(self) -> dict:
+        """Round counter + the full EMA time table, JSON-safe (int-keyed
+        dicts as pair-lists; floats round-trip bit-exactly)."""
+        return {"round": self.round,
+                "table": [[cid, sorted(d.items())] for cid, d
+                          in sorted(self.table._t.items(),
+                                    key=lambda kv: str(kv[0]))]}
+
+    def restore_state(self, st: dict):
+        self.round = int(st["round"])
+        self.table._t = {cid: {int(s): float(t) for s, t in d}
+                         for cid, d in st["table"]}
+
 
 class MinTimeScheduler(SlidingSplitScheduler):
     """BEYOND-PAPER variant: after warm-up each device picks the split
@@ -160,3 +174,6 @@ class FixedSplitScheduler:
 
     def end_round(self):
         self.round += 1
+
+    export_state = SlidingSplitScheduler.export_state
+    restore_state = SlidingSplitScheduler.restore_state

@@ -6,11 +6,20 @@ Usage:
       --mode s2fl --rounds 50 --alpha 0.5 [--reduced]
   PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
       --reduced --rounds 30 --mode s2fl
+
+Restartable service loop (README §Service loop): ``--checkpoint-every N``
+snapshots the FULL training state (model + driver timeline + channel +
+scheduler + rng — checkpoint/state.py) every N rounds into
+``--checkpoint-dir``; a crashed run resumes with ``--resume-from
+<snapshot.npz>`` and replays the remaining rounds bit-exactly on the
+fp32 sync path. ``--fault-plan`` / ``--fault-kill-prob`` arm churn
+injection (core/faults.py) for chaos drills against the same loop.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 from repro.configs import get_config, make_reduced
@@ -40,7 +49,7 @@ def build_data(cfg, *, n_train: int, n_test: int, n_clients: int, alpha,
     return fed, test, n_classes
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="resnet8")
     ap.add_argument("--mode", default="s2fl",
@@ -157,7 +166,48 @@ def main(argv=None):
                          "before its next upload may start (off = the "
                          "semi-async queue's overcommit optimism); "
                          "only observable under --pipeline")
-    args = ap.parse_args(argv)
+    # fault injection + restartable service loop (core/faults.py,
+    # checkpoint/state.py) — see core/README.md §Failure semantics
+    ap.add_argument("--fault-plan", default="",
+                    help="JSON FaultPlan file of seeded kill/rejoin "
+                         "events (core/faults.py to_file format)")
+    ap.add_argument("--fault-kill-prob", type=float, default=0.0,
+                    help="random-process churn: per-round kill "
+                         "probability per alive device (> 0 generates "
+                         "a seeded FaultPlan; ignored with "
+                         "--fault-plan)")
+    ap.add_argument("--fault-rejoin-prob", type=float, default=0.5,
+                    help="per-round rejoin probability per dead device "
+                         "(random-process churn)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the random fault process")
+    ap.add_argument("--fault-server-policy", default="cancel",
+                    choices=["cancel", "orphan"],
+                    help="a dead device's server job: 'cancel' frees "
+                         "the slot at the kill instant, 'orphan' lets "
+                         "an already-fed backward run to completion "
+                         "(result dropped either way)")
+    ap.add_argument("--fault-residual-policy", default="restore",
+                    choices=["restore", "discard"],
+                    help="a rejoining device's quarantined "
+                         "error-feedback residuals: restored, or "
+                         "discarded with their L2 mass metered")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="snapshot the FULL training state every N "
+                         "rounds into --checkpoint-dir (0 = off)")
+    ap.add_argument("--checkpoint-dir", default="checkpoints",
+                    help="where --checkpoint-every writes "
+                         "round<NNNNN>.npz snapshots")
+    ap.add_argument("--resume-from", default="",
+                    help="resume a crashed/stopped run from a "
+                         "checkpoint/state.py snapshot; the remaining "
+                         "rounds replay bit-exactly on the fp32 sync "
+                         "path")
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced and not hasattr(cfg, "family"):
@@ -192,6 +242,23 @@ def main(argv=None):
         use_balance=not args.no_balance, use_sliding=not args.no_sliding,
         n_classes=n_classes, comm=ccfg, driver=dcfg,
         fused_comm=args.fused_comm, fused_server=args.fused_server)
+
+    # churn: an explicit plan file wins; otherwise a seeded random
+    # process over the federation's cids (deterministic per seed, so a
+    # resumed run sees the identical schedule)
+    fault_plan = None
+    if args.fault_plan:
+        from repro.core.faults import FaultPlan
+        fault_plan = FaultPlan.from_file(args.fault_plan)
+    elif args.fault_kill_prob > 0:
+        from repro.core.faults import FaultPlan
+        fault_plan = FaultPlan.random(
+            sorted(fed), args.rounds, seed=args.fault_seed,
+            kill_prob=args.fault_kill_prob,
+            rejoin_prob=args.fault_rejoin_prob,
+            server_policy=args.fault_server_policy,
+            residual_policy=args.fault_residual_policy)
+
     # observability: one recorder feeds the driver's flight/window
     # hooks, the channel's wire counters, and (when streaming) the live
     # metrics registry — absent flags, nothing is built and every hook
@@ -204,22 +271,39 @@ def main(argv=None):
         if args.metrics_out:
             sink = JsonlSink(args.metrics_out)
 
-    eng = S2FLEngine(model, fed, ecfg, recorder=recorder)
+    eng = S2FLEngine(model, fed, ecfg, recorder=recorder,
+                     fault_plan=fault_plan)
+
+    # service loop: resume restores the FULL state (history included —
+    # its length is the next round index) and replays the remainder
+    start_round = 0
+    if args.resume_from:
+        from repro.checkpoint import restore_run_state
+        restore_run_state(args.resume_from, eng)
+        start_round = len(eng.history)
+        print(f"== resumed {args.resume_from} at round {start_round} ==")
 
     emitted = 0
 
     def on_round(rec):
         nonlocal emitted
-        if sink is None:
-            return
-        if rec["round"] % max(args.metrics_every, 1) == 0:
+        if sink is not None \
+                and rec["round"] % max(args.metrics_every, 1) == 0:
             sink.emit({"kind": "round", **rec,
                        "metrics": registry.snapshot()})
             emitted += 1
+        done = rec["round"] + 1
+        if args.checkpoint_every and done % args.checkpoint_every == 0:
+            from repro.checkpoint import save_run_state
+            os.makedirs(args.checkpoint_dir, exist_ok=True)
+            path = os.path.join(args.checkpoint_dir,
+                                f"round{done:05d}.npz")
+            save_run_state(path, eng)
+            print(f"  checkpoint   {path}")
 
     t0 = time.time()
-    eng.run(eval_data=test, eval_every=args.eval_every, verbose=True,
-            on_round=on_round)
+    eng.run(rounds=max(args.rounds - start_round, 0), eval_data=test,
+            eval_every=args.eval_every, verbose=True, on_round=on_round)
     final = eng.evaluate(test)
     wall = time.time() - t0
 
@@ -228,6 +312,9 @@ def main(argv=None):
         "clients": args.clients, "per_round": args.per_round,
         "final_loss": final["loss"], "final_acc": final["acc"],
         "sim_clock_s": eng.clock, "comm_bytes": eng.comm,
+        "dispatched": eng.driver.n_dispatched,
+        "committed": eng.driver.n_committed,
+        "abandoned": eng.driver.n_abandoned,
         "wall_s": wall,
     }
     print("== run summary ==")

@@ -1,10 +1,21 @@
 import jax
 import pytest
 
+from hypothesis_compat import HAVE_HYPOTHESIS
+
 # NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
 # and benches must see 1 device; only launch/dryrun.py widens the mesh.
 
 jax.config.update("jax_enable_x64", False)
+
+if HAVE_HYPOTHESIS:
+    # CI selects this with --hypothesis-profile=ci: no deadline (shared
+    # runners stall), examples printed as reproducible blobs, and the
+    # falsifying-example database kept under .hypothesis/ so the chaos
+    # job can upload it as an artifact on failure.
+    from hypothesis import settings as _hsettings
+
+    _hsettings.register_profile("ci", deadline=None, print_blob=True)
 
 
 @pytest.fixture(scope="session")

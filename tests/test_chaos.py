@@ -1,0 +1,591 @@
+"""Chaos suite: fault-injected training with churn, exactly-once
+commits, and full-state checkpoint/resume.
+
+The driver's failure-semantics contract (core/README.md):
+
+  * exactly-once ledger — every dispatched (round, key) work item ends
+    in EXACTLY one of {committed, abandoned}; after ``flush()``,
+    ``n_committed + n_abandoned == n_dispatched`` and the per-round
+    records partition the dispatch set with no overlap;
+  * the clock stays monotone and every link/queue drains fully under
+    ANY seeded (fault plan × resource regime × mode) draw;
+  * a member killed mid-flight loses exactly the contributions that had
+    not committed by the kill instant — an abandoned FluidLink flow
+    keeps its drained bytes, meters the remainder, and frees capacity;
+  * error-feedback residuals of a dead device are quarantined, then
+    restored (live-wins merge) or discarded (L2 mass metered) when it
+    rejoins;
+  * ``export_state``/``restore_state`` round-trip the ENTIRE timeline
+    through JSON bit-exactly: a driver restored at any round replays
+    the remaining rounds identical to the uninterrupted run, and the
+    engine-level ``save_run_state``/``restore_run_state`` extends that
+    to a full training run on the fp32 sync path.
+
+Seeded loops (always run) provide the 20+-draw acceptance floor;
+hypothesis (via tests/hypothesis_compat.py) widens the same invariants
+in CI.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.comm import CommChannel, FluidLink
+from repro.core.driver import AnalyticCost, RoundDriver, _ServerQueue
+from repro.core.faults import FaultEvent, FaultPlan
+from repro.core.scheduler import FixedSplitScheduler, SlidingSplitScheduler
+from repro.core.simulation import make_device_grid
+from repro.core.split import SplitPlan
+
+PLAN = SplitPlan(n_units=8, split_points=(1, 2, 4))
+
+MODES = [("sync", False), ("sync", True),
+         ("semi_async", False), ("semi_async", True)]
+
+
+def _rand_costs(rng):
+    out = {}
+    for s in PLAN.split_points:
+        out[s] = dict(wc_size=float(rng.uniform(1e4, 2e6)),
+                      feat_size=float(rng.uniform(1e2, 2e4)),
+                      fc=float(rng.uniform(1e7, 3e9)),
+                      fs=float(rng.uniform(1e7, 3e9)))
+    return out
+
+
+def _resource_kw(rng):
+    return dict(
+        uplink_capacity=float(rng.choice([0.0, rng.uniform(1e5, 1e7)])),
+        downlink_capacity=float(rng.choice([0.0, rng.uniform(1e5, 1e7)])),
+        server_concurrency=int(rng.integers(0, 4)),
+        gate_redispatch=bool(rng.integers(0, 2)),
+        latency=float(rng.choice([0.0, rng.uniform(0.0, 0.3)])),
+        latency_dist=str(rng.choice(["constant", "uniform",
+                                     "lognormal", "exp"])))
+
+
+def _chaos_drive(costs, fault_plan, *, n_devices, rounds, per_round,
+                 quorum, cap, seed, mode="semi_async", pipeline=True,
+                 latency=0.0, uplink_capacity=0.0, downlink_capacity=0.0,
+                 server_concurrency=0, gate_redispatch=False,
+                 latency_dist="constant",
+                 scheduler=SlidingSplitScheduler):
+    devices = make_device_grid(n_devices, seed=seed)
+    ch = CommChannel(codec="fp32", latency=latency,
+                     uplink_capacity=uplink_capacity,
+                     downlink_capacity=downlink_capacity,
+                     latency_dist=latency_dist)
+    drv = RoundDriver(scheduler(PLAN), AnalyticCost(ch, costs, p=32),
+                      devices, mode=mode, staleness_cap=cap,
+                      quorum=quorum, pipeline=pipeline,
+                      server_concurrency=server_concurrency,
+                      gate_redispatch=gate_redispatch,
+                      fault_plan=fault_plan)
+    rng = np.random.default_rng(seed)
+    recs = []
+    for r in range(rounds):
+        part = rng.choice(devices, size=per_round, replace=False)
+        recs.append(drv.run_round(part))
+    flushed, _ = drv.flush()
+    return drv, recs, flushed
+
+
+def _assert_exactly_once(drv, recs, flushed):
+    """The ledger invariant: commits + abandons partition dispatches."""
+    committed = [k for r in recs for k in r.committed] + list(flushed)
+    abandoned = [k for r in recs for k in r.abandoned]
+    dispatched = [c for r in recs for c in r.splits]
+    assert sorted(committed + abandoned, key=str) \
+        == sorted(dispatched, key=str)
+    assert drv.n_dispatched == len(dispatched)
+    assert drv.n_committed == len(committed)
+    assert drv.n_abandoned == len(abandoned)
+    assert drv.n_committed + drv.n_abandoned == drv.n_dispatched
+    # nothing lingers: heaps empty, every flight torn down or drained
+    assert not drv._pending and not drv._downloads
+    assert not drv._flights
+
+
+def _assert_links_drained(drv):
+    """Byte conservation with kills: every flow drains fully by its own
+    solved finish (abandoned flows land truncated at their kill instant)
+    and metered abandoned bytes are never negative. The horizon is the
+    link's own — a gated flow whose commit event was abandoned may
+    finish after the flushed clock (the upload completed; only the
+    commit that depended on it was torn down)."""
+    for link in (drv._uplink, drv._downlink):
+        if link is None or not len(link):
+            continue
+        assert link.abandoned_bytes >= 0.0
+        fins = [f for f in link.solve() if math.isfinite(f)]
+        horizon = max([drv.clock] + fins)
+        rem = link.remaining_at(horizon)
+        assert sum(rem) == pytest.approx(
+            0.0, abs=1e-6 * max(link.submitted_bytes, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# the acceptance floor: 24 seeded (fault plan × resource regime) draws
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(24))
+def test_chaos_exactly_once_under_seeded_churn(seed):
+    """For every seeded draw of (random fault plan, random resource
+    regime, mode, pipelining): no dropped or double-counted update,
+    monotone clock, bounded staleness, fully drained links."""
+    rng = np.random.default_rng(seed)
+    costs = _rand_costs(rng)
+    n_devices = int(rng.integers(3, 9))
+    rounds = int(rng.integers(3, 8))
+    per_round = int(rng.integers(2, n_devices + 1))
+    quorum = float(rng.uniform(0.2, 1.0))
+    cap = int(rng.integers(0, 3))
+    mode, pipeline = MODES[seed % len(MODES)]
+    plan = FaultPlan.random(
+        list(range(n_devices)), rounds, seed=seed,
+        kill_prob=0.35, rejoin_prob=0.5, mid_flight_frac=0.5,
+        server_policy=("cancel", "orphan")[seed % 2],
+        residual_policy=("restore", "discard")[(seed // 2) % 2])
+    drv, recs, flushed = _chaos_drive(
+        costs, plan, n_devices=n_devices, rounds=rounds,
+        per_round=per_round, quorum=quorum, cap=cap, seed=seed,
+        mode=mode, pipeline=pipeline, **_resource_kw(rng))
+
+    _assert_exactly_once(drv, recs, flushed)
+    _assert_links_drained(drv)
+    clocks = [0.0] + [r.clock for r in recs] + [drv.clock]
+    assert all(b >= a for a, b in zip(clocks, clocks[1:]))
+    assert all(r.round_time >= 0.0 for r in recs)
+    for r in recs:
+        assert all(v <= cap for v in r.staleness.values()), r
+    # NOTE: one round's record may show the same bare key both committed
+    # and abandoned — those are different DISPATCHES (a stale key from an
+    # earlier round committing while the fresh incarnation is torn down).
+    # Exactly-once identity is (dispatch round, key): the multiset
+    # equality in _assert_exactly_once is the real invariant.
+
+
+def test_chaos_without_faults_degenerates_to_baseline():
+    """An empty fault plan must be indistinguishable from no plan."""
+    rng = np.random.default_rng(7)
+    costs = _rand_costs(rng)
+    kw = dict(n_devices=5, rounds=4, per_round=4, quorum=0.5, cap=1,
+              seed=7, mode="semi_async", pipeline=True)
+    base, base_recs, base_fl = _chaos_drive(costs, None, **kw)
+    empt, empt_recs, empt_fl = _chaos_drive(costs, FaultPlan([]), **kw)
+    assert base.clock == empt.clock
+    assert base.n_abandoned == empt.n_abandoned == 0
+    assert [r.committed for r in base_recs] \
+        == [r.committed for r in empt_recs]
+    assert list(base_fl) == list(empt_fl)
+
+
+def test_pre_dispatch_kill_excludes_device_until_rejoin():
+    """A device killed before dispatch never enters the cohort; after
+    its scheduled rejoin it is dispatched (and committed) again."""
+    rng = np.random.default_rng(3)
+    costs = _rand_costs(rng)
+    plan = FaultPlan([FaultEvent(round=1, cid=0, kind="kill"),
+                      FaultEvent(round=3, cid=0, kind="rejoin")])
+    drv, recs, flushed = _chaos_drive(
+        costs, plan, n_devices=3, rounds=5, per_round=3, quorum=1.0,
+        cap=0, seed=3, mode="sync", pipeline=False)
+    assert recs[1].killed == (0,)
+    assert 0 not in recs[1].splits and 0 not in recs[2].splits
+    assert recs[3].rejoined == (0,)
+    assert 0 in recs[3].splits
+    _assert_exactly_once(drv, recs, flushed)
+
+
+def test_mid_flight_kill_abandons_only_undelivered_work():
+    """at=0.0 kills at dispatch (everything of the victim's round in
+    flight is lost); at=1.0 kills at the round horizon (every commit
+    already landed, nothing abandoned)."""
+    rng = np.random.default_rng(11)
+    costs = _rand_costs(rng)
+    for at, expect_abandon in ((0.0, True), (1.0, False)):
+        plan = FaultPlan([FaultEvent(round=1, cid=0, kind="kill", at=at)])
+        drv, recs, flushed = _chaos_drive(
+            costs, plan, n_devices=3, rounds=3, per_round=3, quorum=1.0,
+            cap=0, seed=11, mode="sync", pipeline=False)
+        assert recs[1].killed == (0,)
+        assert 0 in recs[1].splits          # dispatched before the kill
+        assert (0 in recs[1].abandoned) == expect_abandon
+        assert (0 in recs[1].committed) == (not expect_abandon)
+        _assert_exactly_once(drv, recs, flushed)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis widening of the same invariants (real in CI, skipped locally)
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 2**31 - 1),
+       n_devices=st.integers(2, 9),
+       rounds=st.integers(1, 7),
+       quorum=st.floats(0.1, 1.0),
+       cap=st.integers(0, 3),
+       kill_prob=st.floats(0.0, 0.6))
+@settings(max_examples=40, deadline=None)
+def test_chaos_exactly_once_property(seed, n_devices, rounds, quorum,
+                                     cap, kill_prob):
+    rng = np.random.default_rng(seed)
+    costs = _rand_costs(rng)
+    per_round = int(rng.integers(1, n_devices + 1))
+    mode, pipeline = MODES[seed % len(MODES)]
+    plan = FaultPlan.random(
+        list(range(n_devices)), rounds, seed=seed, kill_prob=kill_prob,
+        rejoin_prob=float(rng.uniform(0.0, 1.0)),
+        server_policy=str(rng.choice(["cancel", "orphan"])),
+        residual_policy=str(rng.choice(["restore", "discard"])))
+    drv, recs, flushed = _chaos_drive(
+        costs, plan, n_devices=n_devices, rounds=rounds,
+        per_round=per_round, quorum=quorum, cap=cap, seed=seed,
+        mode=mode, pipeline=pipeline, **_resource_kw(rng))
+    _assert_exactly_once(drv, recs, flushed)
+    _assert_links_drained(drv)
+    clocks = [0.0] + [r.clock for r in recs] + [drv.clock]
+    assert all(b >= a for a, b in zip(clocks, clocks[1:]))
+    for r in recs:
+        assert all(v <= cap for v in r.staleness.values()), r
+
+
+# ---------------------------------------------------------------------------
+# driver checkpoint/resume: bit-equality through a JSON round-trip
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(8))
+def test_driver_state_roundtrip_bit_exact(seed):
+    """Snapshot the driver mid-run (through an actual JSON encode →
+    decode, as the .npz extra side-channel does), restore into a fresh
+    identically-configured driver, and replay the remaining rounds on
+    the same participant schedule: every per-round record and the
+    flushed clock must be bit-identical to the uninterrupted run."""
+    rng = np.random.default_rng(1000 + seed)
+    costs = _rand_costs(rng)
+    n_devices, rounds = 6, 6
+    k = int(rng.integers(1, rounds))
+    parts = [sorted(rng.choice(n_devices, size=4,
+                               replace=False).tolist())
+             for _ in range(rounds)]
+    res = _resource_kw(rng)
+    mode, pipeline = MODES[seed % len(MODES)]
+    plan = FaultPlan.random(list(range(n_devices)), rounds,
+                            seed=seed, kill_prob=0.25)
+
+    def mk():
+        devices = make_device_grid(n_devices, seed=seed)
+        ch = CommChannel(codec="fp32", latency=res["latency"],
+                         uplink_capacity=res["uplink_capacity"],
+                         downlink_capacity=res["downlink_capacity"],
+                         latency_dist=res["latency_dist"])
+        drv = RoundDriver(
+            SlidingSplitScheduler(PLAN), AnalyticCost(ch, costs, p=32),
+            devices, mode=mode, staleness_cap=1, quorum=0.5,
+            pipeline=pipeline,
+            server_concurrency=res["server_concurrency"],
+            gate_redispatch=res["gate_redispatch"], fault_plan=plan)
+        return drv, {d.cid: d for d in devices}
+
+    drv_a, by_id = mk()
+    recs_a, snap = [], None
+    for r in range(rounds):
+        if r == k:
+            snap = json.loads(json.dumps(drv_a.export_state()))
+        recs_a.append(drv_a.run_round([by_id[c] for c in parts[r]]))
+    flushed_a, _ = drv_a.flush()
+
+    drv_b, by_id_b = mk()
+    drv_b.restore_state(snap)
+    recs_b = [drv_b.run_round([by_id_b[c] for c in parts[r]])
+              for r in range(k, rounds)]
+    flushed_b, _ = drv_b.flush()
+
+    assert drv_b.clock == drv_a.clock           # exact, not approx
+    assert drv_b.comm == drv_a.comm
+    assert list(flushed_b) == list(flushed_a)
+    assert (drv_b.n_dispatched, drv_b.n_committed, drv_b.n_abandoned) \
+        == (drv_a.n_dispatched, drv_a.n_committed, drv_a.n_abandoned)
+    for ra, rb in zip(recs_a[k:], recs_b):
+        assert rb.clock == ra.clock
+        assert rb.round_time == ra.round_time
+        assert rb.splits == ra.splits
+        assert rb.times == ra.times
+        assert rb.committed == ra.committed
+        assert rb.abandoned == ra.abandoned
+        assert rb.killed == ra.killed and rb.rejoined == ra.rejoined
+        assert rb.staleness == ra.staleness
+
+
+def test_driver_state_json_serializable_mid_flight():
+    """export_state() must be pure-JSON (inf/nan flights included) at
+    EVERY round boundary, not just quiescent ones."""
+    rng = np.random.default_rng(5)
+    costs = _rand_costs(rng)
+    devices = make_device_grid(5, seed=5)
+    ch = CommChannel(codec="fp32", uplink_capacity=1e6,
+                     downlink_capacity=1e6)
+    drv = RoundDriver(SlidingSplitScheduler(PLAN),
+                      AnalyticCost(ch, costs, p=32), devices,
+                      mode="semi_async", staleness_cap=2, quorum=0.3,
+                      pipeline=True, server_concurrency=2)
+    for r in range(4):
+        drv.run_round(devices)
+        st_dict = json.loads(json.dumps(drv.export_state()))
+        assert st_dict["round"] == r + 1
+    drv.flush()
+
+
+# ---------------------------------------------------------------------------
+# fault primitives: FluidLink.abandon, _ServerQueue.cancel, residual
+# quarantine
+# ---------------------------------------------------------------------------
+def test_fluid_link_abandon_frees_capacity_and_conserves_bytes():
+    link = FluidLink(100.0)
+    a = link.submit(0.0, 1000.0, 100.0)
+    b = link.submit(0.0, 1000.0, 100.0)
+    # fair share 50 B/s each: 250 B drained apiece by t=5
+    dropped = link.abandon(a, 5.0)
+    assert dropped == pytest.approx(750.0)
+    assert link.abandoned_bytes == pytest.approx(750.0)
+    fins = link.solve()
+    assert fins[a] == pytest.approx(5.0)    # lands at the kill instant
+    # b: 250 B by t=5, then the whole link to itself -> 750/100 s more
+    assert fins[b] == pytest.approx(12.5)
+    assert sum(link.remaining_at(20.0)) == pytest.approx(0.0)
+    # second abandon after the flow drained: no-op
+    assert link.abandon(a, 6.0) == 0.0
+    assert link.abandoned_bytes == pytest.approx(750.0)
+
+
+def test_fluid_link_abandon_unstarted_flow_drops_whole():
+    link = FluidLink(100.0)
+    f = link.submit(10.0, 500.0, 50.0)
+    assert link.abandon(f, 2.0) == pytest.approx(500.0)
+    assert link.solve()[f] == pytest.approx(10.0)   # empty, at arrival
+    assert link.abandoned_bytes == pytest.approx(500.0)
+
+
+def test_fluid_link_abandon_leaves_survivor_history_unchanged():
+    """Truncation must not rewrite the past: a survivor's drained bytes
+    at any instant before the kill are identical with and without the
+    abandon."""
+    mk = lambda: [FluidLink(100.0)]
+    (link,) = mk()
+    (ref,) = mk()
+    for lk in (link, ref):
+        lk.submit(0.0, 2000.0, 80.0)
+        lk.submit(1.0, 2000.0, 80.0)
+    link.abandon(0, 6.0)
+    for t in (0.5, 2.0, 4.0, 5.9):
+        assert link.remaining_at(t)[1] == pytest.approx(
+            ref.remaining_at(t)[1])
+    # after the kill the survivor can only be ahead (capacity freed)
+    assert link.remaining_at(10.0)[1] <= ref.remaining_at(10.0)[1] + 1e-9
+
+
+def test_server_queue_cancel_waiting_running_finished():
+    q = _ServerQueue(1)
+    j0 = q.add(0.0, 10.0)           # runs [0, 10)
+    j1 = q.add(1.0, 5.0)            # queued behind j0
+    assert q.cancel(j1, 2.0)        # still waiting: leaves the queue
+    assert q.solve()[j1] == pytest.approx(2.0)
+    assert q.cancel(j0, 4.0)        # running: truncated at the kill
+    assert q.solve()[j0] == pytest.approx(4.0)
+    assert not q.cancel(j0, 20.0)   # already finished: no-op
+    # a job admitted after the cancels is unaffected
+    j2 = q.add(6.0, 3.0)
+    assert q.solve()[j2] == pytest.approx(9.0)
+
+
+def test_channel_residual_quarantine_restore_and_discard():
+    import jax.numpy as jnp
+    ch = CommChannel(codec="topk", error_feedback=True, topk_frac=0.5)
+    x = jnp.arange(8.0) + 1.0
+    ch.uplink_features(3, x)
+    ch.uplink_features(4, x)
+    assert any(k[1] == 3 for k in ch._residuals)
+    norm_all = ch.residual_norm()
+    ch.quarantine_residuals(3)
+    assert not any(k[1] == 3 for k in ch._residuals)
+    assert ch.residual_norm() < norm_all
+    # restore: the quarantined accumulator returns live, bit-identical
+    ch.release_residuals(3, restore=True)
+    assert ch.residual_norm() == pytest.approx(norm_all)
+    # restore is live-wins: a fresh residual from the new incarnation
+    # survives a stale quarantined one under the same key
+    ch.quarantine_residuals(3)
+    ch.uplink_features(3, 2.0 * x)
+    fresh = {k: v for k, v in ch._residuals.items() if k[1] == 3}
+    ch.release_residuals(3, restore=True)
+    for k, v in fresh.items():
+        np.testing.assert_array_equal(np.asarray(ch._residuals[k]),
+                                      np.asarray(v))
+    # discard: mass is metered, not silently lost
+    ch.quarantine_residuals(4)
+    held_norm = ch.residual_norm()          # only cid 3 left live
+    ch.release_residuals(4, restore=False)
+    assert ch.ef_discarded_mass > 0.0
+    assert ch.residual_norm() == pytest.approx(held_norm)
+    # releasing a device with nothing quarantined is a no-op
+    before = ch.ef_discarded_mass
+    ch.release_residuals(99, restore=False)
+    assert ch.ef_discarded_mass == before
+
+
+def test_residual_state_flat_roundtrip():
+    import jax.numpy as jnp
+    ch = CommChannel(codec="topk", error_feedback=True, topk_frac=0.5)
+    ch.uplink_features(np.int64(2), jnp.arange(6.0) + 1.0)
+    ch.uplink_features(5, jnp.arange(6.0) * 3.0 + 1.0)
+    ch.quarantine_residuals(5)
+    flat = ch.export_residual_state()
+    assert all(n[:2] in ("r:", "q:") for n in flat)
+    other = CommChannel(codec="topk", error_feedback=True, topk_frac=0.5)
+    other.restore_residual_state(flat)
+    assert set(other._residuals) == set(ch._residuals)
+    assert set(other._quarantine) == set(ch._quarantine)
+    with pytest.raises(ValueError, match="unknown residual"):
+        other.restore_residual_state({"x:[1]": jnp.zeros(2)})
+
+
+# ---------------------------------------------------------------------------
+# fault-plan object: determinism, validation, serialization
+# ---------------------------------------------------------------------------
+def test_fault_plan_random_is_deterministic_and_sane():
+    cids = list(range(6))
+    a = FaultPlan.random(cids, 10, seed=42, kill_prob=0.4)
+    b = FaultPlan.random(cids, 10, seed=42, kill_prob=0.4)
+    assert a.events == b.events
+    c = FaultPlan.random(cids, 10, seed=43, kill_prob=0.4)
+    assert a.events != c.events             # seed actually matters
+    # a device is never killed twice without a rejoin in between
+    dead = set()
+    for e in a.events:
+        if e.kind == "kill":
+            assert e.cid not in dead
+            dead.add(e.cid)
+        else:
+            assert e.cid in dead
+            dead.discard(e.cid)
+
+
+def test_fault_plan_validation_and_file_roundtrip(tmp_path):
+    with pytest.raises(ValueError):
+        FaultEvent(round=0, cid=1, kind="explode")
+    with pytest.raises(ValueError):
+        FaultEvent(round=0, cid=1, kind="kill", at=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan([], server_policy="shrug")
+    plan = FaultPlan([FaultEvent(round=2, cid=1, kind="kill", at=0.25),
+                      FaultEvent(round=4, cid=1, kind="rejoin")],
+                     server_policy="orphan", residual_policy="discard")
+    p = tmp_path / "plan.json"
+    plan.to_file(str(p))
+    back = FaultPlan.from_file(str(p))
+    assert back.events == plan.events
+    assert back.server_policy == "orphan"
+    assert back.residual_policy == "discard"
+    assert len(back) == 2
+    # rejoins order before kills within a round
+    mixed = FaultPlan([FaultEvent(round=1, cid=0, kind="kill"),
+                       FaultEvent(round=1, cid=1, kind="rejoin")])
+    kinds = [e.kind for e in mixed.for_round(1)]
+    assert kinds == ["rejoin", "kill"]
+
+
+# ---------------------------------------------------------------------------
+# engine level (training-heavy: quick loop skips these via -m "not slow")
+# ---------------------------------------------------------------------------
+def _tiny_engine(mode="s2fl", rounds=4, *, fault_plan=None, seed=0,
+                 exec_mode="sync", pipeline=False):
+    from repro.configs import get_config
+    from repro.configs.base import DriverConfig
+    from repro.core.engine import EngineConfig, S2FLEngine
+    from repro.data.partition import federate
+    from repro.data.synthetic import make_image_dataset
+    from repro.models import SplitModel
+    ds = make_image_dataset(160, seed=0)
+    fed = federate(ds, 5, alpha=0.3, seed=0)
+    model = SplitModel(get_config("resnet8"))
+    ecfg = EngineConfig(mode=mode, rounds=rounds, clients_per_round=3,
+                        batch_size=8, group_size=2, local_steps=1,
+                        seed=seed,
+                        driver=DriverConfig(exec_mode=exec_mode,
+                                            pipeline=pipeline))
+    return S2FLEngine(model, fed, ecfg, fault_plan=fault_plan)
+
+
+@pytest.mark.slow
+def test_engine_crash_and_resume_is_bit_exact(tmp_path):
+    """The acceptance criterion: on the fp32 sync path, run(2) →
+    save_run_state → fresh engine → restore_run_state → run(2) must
+    reproduce run(4)'s parameters and history bit-for-bit."""
+    import jax
+
+    from repro.checkpoint import restore_run_state, save_run_state
+    eng_a = _tiny_engine(rounds=4)
+    eng_a.run(rounds=4)
+
+    eng_b = _tiny_engine(rounds=4)
+    eng_b.run(rounds=2)
+    path = str(tmp_path / "mid.npz")
+    save_run_state(path, eng_b)
+
+    eng_c = _tiny_engine(rounds=4)
+    restore_run_state(path, eng_c)
+    assert len(eng_c.history) == 2
+    eng_c.run(rounds=2)
+
+    for a, c in zip(jax.tree.leaves(eng_a.params),
+                    jax.tree.leaves(eng_c.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+    assert eng_c.clock == eng_a.clock
+    assert len(eng_c.history) == len(eng_a.history) == 4
+    for ha, hc in zip(eng_a.history, eng_c.history):
+        assert ha == hc
+
+
+@pytest.mark.slow
+def test_restore_rejects_wrong_mode_and_format(tmp_path):
+    from repro.checkpoint import (restore_run_state, save_checkpoint,
+                                  save_run_state)
+    eng = _tiny_engine(rounds=1)
+    eng.run(rounds=1)
+    path = str(tmp_path / "st.npz")
+    save_run_state(path, eng)
+    other = _tiny_engine(mode="fedavg", rounds=1)
+    with pytest.raises(ValueError, match="mode"):
+        restore_run_state(path, other)
+    plain = str(tmp_path / "plain.npz")
+    save_checkpoint(plain, {"w": np.zeros(3)})
+    with pytest.raises(ValueError, match="run-state"):
+        restore_run_state(plain, eng)
+
+
+@pytest.mark.slow
+def test_engine_chaos_run_balances_ledger():
+    """A real training run under churn: the engine's held-work table
+    empties, the ledger balances, and the timeline stays finite."""
+    plan = FaultPlan.random(list(range(5)), 5, seed=9, kill_prob=0.35,
+                            rejoin_prob=0.6)
+    eng = _tiny_engine(rounds=5, fault_plan=plan,
+                       exec_mode="semi_async", pipeline=True)
+    eng.run(rounds=5)
+    drv = eng.driver
+    assert drv.n_dispatched > 0
+    assert drv.n_committed + drv.n_abandoned == drv.n_dispatched
+    assert not eng._held
+    assert not drv._pending and not drv._flights
+    assert math.isfinite(eng.clock)
+    assert all(math.isfinite(h["loss"]) for h in eng.history
+               if h.get("loss") is not None)
+
+
+@pytest.mark.slow
+def test_engine_fedavg_chaos_run_balances_ledger():
+    plan = FaultPlan.random(list(range(5)), 4, seed=2, kill_prob=0.3)
+    eng = _tiny_engine(mode="fedavg", rounds=4, fault_plan=plan,
+                       exec_mode="semi_async", pipeline=True)
+    eng.run(rounds=4)
+    drv = eng.driver
+    assert drv.n_committed + drv.n_abandoned == drv.n_dispatched
+    assert not eng._held

@@ -1,0 +1,166 @@
+"""Checkpoint layer: structure-skeleton round-trips (no repr() strings),
+mismatch diagnostics, and the stateful-codec/EF-residual replay contract
+that full-run resume depends on."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.comm import CommChannel
+
+
+def _nested_tree():
+    return {"layers": [{"w": np.arange(6.0).reshape(2, 3),
+                        "b": np.zeros(3)},
+                       {"w": np.ones((3, 1)), "b": np.full(1, 7.0)}],
+            "head": (np.eye(2), np.array([1, 2, 3])),
+            "scalars": {"step": np.asarray(42)}}
+
+
+def _assert_same_structure(a, b):
+    assert type(a) is type(b)
+    if isinstance(a, dict):
+        assert sorted(a) == sorted(b)
+        for k in a:
+            _assert_same_structure(a[k], b[k])
+    elif isinstance(a, (list, tuple)):
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            _assert_same_structure(x, y)
+    else:
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_roundtrip_without_reference_tree(tmp_path):
+    """The skeleton alone rebuilds the exact structure: dicts stay
+    dicts, lists lists, tuples TUPLES (a repr()-string format cannot
+    express this without eval)."""
+    tree = _nested_tree()
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, tree, extra={"round": 3, "cid": np.int64(5)})
+    restored, extra = load_checkpoint(path)
+    _assert_same_structure(tree, restored)
+    assert isinstance(restored["head"], tuple)
+    assert isinstance(restored["layers"], list)
+    # np scalars in extra crossed JSON as plain Python
+    assert extra == {"round": 3, "cid": 5}
+
+
+def test_roundtrip_with_reference_tree(tmp_path):
+    tree = _nested_tree()
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, tree)
+    restored, _ = load_checkpoint(path, like=tree)
+    _assert_same_structure(tree, restored)
+
+
+def test_mismatch_names_the_differing_paths(tmp_path):
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, {"a": np.zeros(2), "b": np.zeros(2)})
+    with pytest.raises(ValueError, match="mismatch") as ei:
+        load_checkpoint(path, like={"a": np.zeros(2), "c": np.zeros(2)})
+    msg = str(ei.value)
+    assert "/b" in msg and "/c" in msg
+
+
+def test_save_creates_parent_directory(tmp_path):
+    path = str(tmp_path / "deep" / "nested" / "ckpt.npz")
+    save_checkpoint(path, {"w": np.zeros(1)})
+    assert os.path.exists(path)
+    restored, _ = load_checkpoint(path)
+    np.testing.assert_array_equal(restored["w"], np.zeros(1))
+
+
+# ---------------------------------------------------------------------------
+# stateful-codec checkpoint contract (rand-k counter stream + EF residuals)
+# ---------------------------------------------------------------------------
+def _mk_randk():
+    return CommChannel(codec="randk", error_feedback=True, topk_frac=0.25)
+
+
+def _roundtrip_tensor(ch, cid, x):
+    return np.asarray(ch.uplink_features(cid, x))
+
+
+def test_codec_state_restore_replays_draw_stream(tmp_path):
+    """export_codec_state/restore_codec_state: a restored channel's
+    subsequent rand-k index draws — and therefore its decoded tensors
+    and EF residuals — are identical to the uninterrupted channel's."""
+    x = jnp.arange(32.0).reshape(4, 8) + 1.0
+    a = _mk_randk()
+    for _ in range(3):
+        _roundtrip_tensor(a, 1, x)
+    st = a.export_codec_state()
+    assert st["feature"]["calls"] == 3
+    res = a.export_residual_state()
+
+    b = _mk_randk()
+    b.restore_codec_state(st)
+    b.restore_residual_state({k: jnp.asarray(v) for k, v in res.items()})
+    for _ in range(4):                     # streams stay locked in step
+        ya = _roundtrip_tensor(a, 1, x)
+        yb = _roundtrip_tensor(b, 1, x)
+        np.testing.assert_array_equal(ya, yb)
+    assert a.export_codec_state() == b.export_codec_state()
+    assert a.residual_norm() == pytest.approx(b.residual_norm())
+
+
+def test_codec_state_survives_json(tmp_path):
+    """The codec state rides the checkpoint's JSON side-channel — it
+    must round-trip through an actual save/load. (Feedback off: this
+    isolates the counter stream; the residual tensors travel separately
+    and are covered above.)"""
+    a = CommChannel(codec="randk", topk_frac=0.25)
+    x = jnp.arange(16.0) + 1.0
+    for _ in range(5):
+        _roundtrip_tensor(a, 2, x)
+    path = str(tmp_path / "codec.npz")
+    save_checkpoint(path, {"dummy": np.zeros(1)},
+                    extra={"codecs": a.export_codec_state()})
+    _, extra = load_checkpoint(path)
+    b = CommChannel(codec="randk", topk_frac=0.25)
+    b.restore_codec_state(extra["codecs"])
+    np.testing.assert_array_equal(_roundtrip_tensor(a, 2, x),
+                                  _roundtrip_tensor(b, 2, x))
+
+
+def test_reset_codecs_rewinds_to_stream_start():
+    """reset_codecs + reset_feedback must reproduce a fresh channel's
+    first transfer exactly (the counter rewinds to call 0)."""
+    ch = _mk_randk()
+    x = jnp.arange(64.0) + 1.0
+    first = _roundtrip_tensor(ch, 1, x)
+    for _ in range(3):
+        _roundtrip_tensor(ch, 1, x)
+    assert ch.export_codec_state()["feature"]["calls"] == 4
+    ch.reset_codecs()
+    ch.reset_feedback()
+    assert ch.export_codec_state()["feature"]["calls"] == 0
+    np.testing.assert_array_equal(_roundtrip_tensor(ch, 1, x), first)
+
+
+def test_restore_codec_state_ignores_stateless_roles():
+    """A state dict from a richer channel restores cleanly into one
+    whose codecs have no state hooks (fp32 everywhere) — the restore is
+    a no-op, not a crash."""
+    a = _mk_randk()
+    _roundtrip_tensor(a, 1, jnp.arange(8.0))
+    plain = CommChannel(codec="fp32")
+    plain.restore_codec_state(a.export_codec_state())
+    assert plain.export_codec_state() == {}
+
+
+def test_channel_export_state_roundtrips_meters():
+    a = _mk_randk()
+    _roundtrip_tensor(a, 1, jnp.arange(8.0) + 1.0)
+    a.sim_round = 5
+    a.ef_discarded_mass = 2.5
+    st = a.export_state()
+    b = _mk_randk()
+    b.restore_state(st)
+    assert b.sim_round == 5
+    assert b.up_bytes == a.up_bytes
+    assert b.ef_discarded_mass == 2.5
+    assert b.export_codec_state() == a.export_codec_state()

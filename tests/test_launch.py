@@ -1,0 +1,194 @@
+"""Launch-layer tests: the train.py flag surface (argparse round-trip
+for everything added since the observability/fusion/fault PRs), the
+restartable service loop (checkpoint → resume equality through the real
+CLI entry point), and serve/dryrun smoke coverage."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.launch.train import build_parser
+
+
+# ---------------------------------------------------------------------------
+# argparse round-trip: every flag the service loop grew
+# ---------------------------------------------------------------------------
+def test_parser_defaults_are_off():
+    args = build_parser().parse_args([])
+    assert args.fused_comm is False and args.fused_server is False
+    assert args.trace_out is None and args.metrics_out is None
+    assert args.fault_plan == "" and args.fault_kill_prob == 0.0
+    assert args.fault_rejoin_prob == 0.5 and args.fault_seed == 0
+    assert args.fault_server_policy == "cancel"
+    assert args.fault_residual_policy == "restore"
+    assert args.checkpoint_every == 0
+    assert args.checkpoint_dir == "checkpoints"
+    assert args.resume_from == ""
+
+
+def test_parser_roundtrips_fusion_and_observability_flags():
+    args = build_parser().parse_args([
+        "--fused-comm", "--fused-server",
+        "--trace-out", "trace.json",
+        "--metrics-out", "metrics.jsonl", "--metrics-every", "3"])
+    assert args.fused_comm is True and args.fused_server is True
+    assert args.trace_out == "trace.json"
+    assert args.metrics_out == "metrics.jsonl"
+    assert args.metrics_every == 3
+
+
+def test_parser_roundtrips_fault_and_resume_flags():
+    args = build_parser().parse_args([
+        "--fault-plan", "plan.json",
+        "--fault-kill-prob", "0.25", "--fault-rejoin-prob", "0.75",
+        "--fault-seed", "7",
+        "--fault-server-policy", "orphan",
+        "--fault-residual-policy", "discard",
+        "--checkpoint-every", "5", "--checkpoint-dir", "snaps",
+        "--resume-from", "snaps/round00005.npz"])
+    assert args.fault_plan == "plan.json"
+    assert args.fault_kill_prob == 0.25
+    assert args.fault_rejoin_prob == 0.75
+    assert args.fault_seed == 7
+    assert args.fault_server_policy == "orphan"
+    assert args.fault_residual_policy == "discard"
+    assert args.checkpoint_every == 5
+    assert args.checkpoint_dir == "snaps"
+    assert args.resume_from == "snaps/round00005.npz"
+
+
+def test_parser_rejects_unknown_policies():
+    with pytest.raises(SystemExit):
+        build_parser().parse_args(["--fault-server-policy", "shrug"])
+    with pytest.raises(SystemExit):
+        build_parser().parse_args(["--fault-residual-policy", "maybe"])
+
+
+# ---------------------------------------------------------------------------
+# dryrun.py: main() control flow with the heavy compile stubbed out
+# ---------------------------------------------------------------------------
+def test_dryrun_main_single_pair_and_json(tmp_path, monkeypatch):
+    from repro.launch import dryrun
+    calls = []
+
+    def stub(arch, shape, *, multi_pod=False, verbose=True, **kw):
+        calls.append((arch, shape, multi_pod, kw))
+        return {"arch": arch, "shape": shape, "hlo_flops": 1.0}
+
+    monkeypatch.setattr(dryrun, "dryrun_one", stub)
+    out = str(tmp_path / "dry.json")
+    rc = dryrun.main(["--arch", "internlm2-1.8b", "--shape", "train_4k",
+                      "--split", "2", "--json", out])
+    assert rc == 0
+    assert calls == [("internlm2-1.8b", "train_4k", False, {"split": 2})]
+    with open(out) as f:
+        recs = json.load(f)
+    assert recs[0]["arch"] == "internlm2-1.8b"
+
+
+def test_dryrun_main_counts_errors(tmp_path, monkeypatch):
+    from repro.launch import dryrun
+
+    def boom(arch, shape, **kw):
+        raise RuntimeError("compile exploded")
+
+    monkeypatch.setattr(dryrun, "dryrun_one", boom)
+    out = str(tmp_path / "dry.json")
+    rc = dryrun.main(["--arch", "internlm2-1.8b", "--shape", "train_4k",
+                      "--json", out])
+    assert rc == 1                        # incremental JSON still written
+    with open(out) as f:
+        recs = json.load(f)
+    assert "compile exploded" in recs[0]["error"]
+
+
+def test_dryrun_main_requires_arch_and_shape():
+    from repro.launch import dryrun
+    with pytest.raises(AssertionError, match="--arch and --shape"):
+        dryrun.main(["--arch", "internlm2-1.8b"])
+
+
+# ---------------------------------------------------------------------------
+# serve.py: tiny real decode (reduced model, 2 tokens)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_serve_generates_tokens(capsys):
+    from repro.launch import serve
+    serve.main(["--arch", "internlm2-1.8b", "--reduced",
+                "--batch", "2", "--prompt-len", "4", "--gen", "2"])
+    out = capsys.readouterr().out
+    assert "generated:" in out and "tok/s" in out
+
+
+@pytest.mark.slow
+def test_serve_generate_shapes_and_determinism():
+    import jax
+
+    from repro.configs import get_config, make_reduced
+    from repro.launch.serve import generate
+    from repro.models import SplitModel
+    cfg = make_reduced(get_config("internlm2-1.8b"))
+    model = SplitModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0,
+                                cfg.vocab_size)
+    a = generate(cfg, params, tokens, steps=3)
+    b = generate(cfg, params, tokens, steps=3)
+    assert a.shape == (2, 3)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(np.asarray(a).max()) < cfg.vocab_size
+
+
+# ---------------------------------------------------------------------------
+# the restartable service loop, end to end through main()
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_train_checkpoint_resume_reproduces_history(tmp_path):
+    """Run 4 rounds with --checkpoint-every 2, then resume the same
+    config from the round-2 snapshot: the resumed run's history and
+    final clock must equal the uninterrupted run's (fp32 sync path)."""
+    from repro.launch.train import main
+    ckdir = str(tmp_path / "snaps")
+    out_a = str(tmp_path / "a.json")
+    out_b = str(tmp_path / "b.json")
+    base = ["--arch", "resnet8", "--mode", "s2fl", "--rounds", "4",
+            "--clients", "4", "--per-round", "2", "--batch-size", "4",
+            "--n-train", "64", "--eval-every", "99", "--seed", "1"]
+    main(base + ["--checkpoint-every", "2", "--checkpoint-dir", ckdir,
+                 "--out", out_a])
+    snap = os.path.join(ckdir, "round00002.npz")
+    assert os.path.exists(snap)
+    assert os.path.exists(os.path.join(ckdir, "round00004.npz"))
+
+    main(base + ["--resume-from", snap, "--out", out_b])
+    with open(out_a) as f:
+        a = json.load(f)
+    with open(out_b) as f:
+        b = json.load(f)
+    assert len(a["history"]) == len(b["history"]) == 4
+    assert b["history"] == a["history"]          # bit-exact floats
+    assert b["clock"] == a["clock"]
+    assert b["summary"]["final_loss"] == a["summary"]["final_loss"]
+
+
+@pytest.mark.slow
+def test_train_fault_flags_drive_chaos_run(tmp_path):
+    """--fault-kill-prob arms the seeded churn process through the real
+    CLI; the summary ledger balances and a plan FILE round-trips."""
+    from repro.core.faults import FaultPlan
+    from repro.launch.train import main
+    out = str(tmp_path / "chaos.json")
+    plan_file = str(tmp_path / "plan.json")
+    FaultPlan.random(list(range(4)), 3, seed=5,
+                     kill_prob=0.4).to_file(plan_file)
+    main(["--arch", "resnet8", "--mode", "s2fl", "--rounds", "3",
+          "--clients", "4", "--per-round", "3", "--batch-size", "4",
+          "--n-train", "64", "--eval-every", "99",
+          "--exec-mode", "semi_async", "--pipeline",
+          "--fault-plan", plan_file, "--out", out])
+    with open(out) as f:
+        rec = json.load(f)
+    s = rec["summary"]
+    assert s["dispatched"] == s["committed"] + s["abandoned"]
+    assert s["dispatched"] > 0

@@ -119,7 +119,7 @@ def test_checkpoint_mismatch_raises():
         path = os.path.join(d, "ckpt.npz")
         save_checkpoint(path, params)
         other = SplitModel(make_reduced(get_config("mamba2-2.7b"))).init(KEY)
-        with pytest.raises(AssertionError):
+        with pytest.raises(ValueError, match="mismatch"):
             load_checkpoint(path, other)
 
 
