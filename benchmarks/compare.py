@@ -1,0 +1,127 @@
+"""CI bench-regression gate: diff a benchmark run against its committed
+baseline and FAIL the build when a machine-stable metric regresses.
+
+Benchmark rows (``benchmarks/common.emit``) carry two kinds of numbers:
+
+  us_per_call        raw wall time — machine/load dependent, NEVER gated
+  derived metrics    ``key=value`` pairs inside the derived string —
+                     the ratios and simulated clocks that are
+                     deterministic for a fixed seed, and therefore
+                     comparable across CI runners
+
+Only two metric shapes are gated (everything else in a derived string
+is informational):
+
+  speedup=1.42x      higher is better (fused-vs-sequential cohort
+                     ratios, aware-vs-blind frontier ratios)
+  *makespan=363.47   lower is better (frontier simulated clocks)
+
+A metric regresses when it is worse than its baseline by more than
+``--tolerance`` (default 20%, the slack for jit/thread jitter in the
+speedup ratios; the simulated makespans are bit-deterministic and only
+move when the physics or the policy changes). Rows present in the
+baseline but missing from the run fail the gate — a benchmark that
+silently stopped running is a regression too. New rows are ignored
+(they gate once they land in the baseline).
+
+    python benchmarks/compare.py --baseline benchmarks/baselines/B.json \
+        --current bench-artifacts/B.json [--tolerance 0.2]
+
+``--update-baseline`` is the escape hatch for intentional perf changes:
+it rewrites the baseline file with the current rows (commit the diff and
+say why in the PR).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import shutil
+import sys
+
+_SPEEDUP = re.compile(r"(?:^|[;\s])(speedup)=([0-9.]+)x")
+_MAKESPAN = re.compile(r"([A-Za-z0-9_.]*makespan)=([0-9.]+)")
+
+
+def metrics_of(derived: str) -> dict:
+    """{key: (value, higher_is_better)} for the gated metrics of one
+    row's derived string."""
+    out = {}
+    for m in _SPEEDUP.finditer(derived):
+        out[m.group(1)] = (float(m.group(2)), True)
+    for m in _MAKESPAN.finditer(derived):
+        out[m.group(1)] = (float(m.group(2)), False)
+    return out
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: r.get("derived", "") for r in rows}
+
+
+def compare(baseline: dict, current: dict, tolerance: float) -> list:
+    """-> list of human-readable failure strings (empty = gate passes)."""
+    fails = []
+    for name, b_derived in sorted(baseline.items()):
+        base = metrics_of(b_derived)
+        if not base:
+            continue
+        if name not in current:
+            fails.append(f"{name}: row missing from current run")
+            continue
+        cur = metrics_of(current[name])
+        for key, (b, higher_better) in sorted(base.items()):
+            if key not in cur:
+                fails.append(f"{name}: metric {key} missing "
+                             f"(baseline {b:g})")
+                continue
+            c = cur[key][0]
+            if higher_better:
+                bad = c < b * (1.0 - tolerance)
+                arrow = f"{b:g} -> {c:g} (floor {b * (1 - tolerance):g})"
+            else:
+                bad = c > b * (1.0 + tolerance)
+                arrow = f"{b:g} -> {c:g} (ceil {b * (1 + tolerance):g})"
+            if bad:
+                fails.append(f"{name}: {key} regressed {arrow}")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline JSON "
+                         "(benchmarks/baselines/)")
+    ap.add_argument("--current", required=True,
+                    help="this run's JSON (write_json output)")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional regression (default 0.2)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="overwrite the baseline with the current rows "
+                         "instead of gating")
+    a = ap.parse_args(argv)
+
+    if a.update_baseline:
+        shutil.copyfile(a.current, a.baseline)
+        print(f"baseline updated: {a.current} -> {a.baseline}")
+        return 0
+
+    fails = compare(load_rows(a.baseline), load_rows(a.current),
+                    a.tolerance)
+    if fails:
+        print(f"BENCH REGRESSION vs {a.baseline} "
+              f"(tolerance {a.tolerance:.0%}):")
+        for f in fails:
+            print(f"  {f}")
+        print("intentional? rerun with --update-baseline and commit "
+              "the new baseline")
+        return 1
+    n = len([1 for d in load_rows(a.baseline).values() if metrics_of(d)])
+    print(f"bench gate OK: {n} gated rows within "
+          f"{a.tolerance:.0%} of {a.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,158 @@
+"""Accuracy x wall-clock frontier: resource-aware vs blind forecasting.
+
+Three CONTENDED regimes (the only ones where the forecasts disagree —
+on an uncontended fabric both price the same Eq.-1 physics):
+
+  server_bound : 1 server backward slot, free links. The blind forecast
+                 prices compute + transfer but never the FIFO queue, so
+                 it happily picks splits with heavy server portions; the
+                 resource-aware forecast charges ``depth x duration /
+                 slots`` and steers toward client-heavy splits that
+                 drain the bottleneck.
+  uplink_jam   : shared ingress (one Table-1 server link for the whole
+                 cohort), 2 slots. Blind divides the link by cohort
+                 LOAD for every leg — including the model dispatch/
+                 collect legs that do not ride the fluid link in the
+                 simulator — so it overcharges model-heavy splits;
+                 aware prices the fair share + live backlog of exactly
+                 the legs that contend.
+  duplex_gate  : ingress + egress contended, 2 slots, re-dispatch gated
+                 on the device's own draining download. Blind knows
+                 nothing of the gate; aware starts its forecast at
+                 ``busy_until(cid)`` and adds both directions' backlog.
+
+Each regime drives IDENTICAL participant draws through two policies
+(MinTime scheduler both — only the forecast differs: ``predictive``
+mean-rate vs ``resource_aware`` ResourceView) plus a third frontier
+point, the joint split x batch-fraction tuner (JointKnobScheduler),
+which trades sample mass for clock. Reported per regime:
+
+  makespan      simulated clock after flush (deterministic, CI-compared)
+  sample mass   committed samples (accuracy-progress proxy; blind and
+                aware commit identical mass, the joint point may spend
+                less)
+
+Acceptance (ISSUE 9): weak domination — aware never slower than blind
+on any contended regime, and >=1.2x faster on at least one.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, emit
+
+
+def _policies(plan):
+    """(name, scheduler-factory, driver-kwargs) per frontier point."""
+    from repro.core.scheduler import JointKnobScheduler, MinTimeScheduler
+    return (
+        ("blind", lambda: MinTimeScheduler(plan), {"predictive": True}),
+        ("aware", lambda: MinTimeScheduler(plan),
+         {"resource_aware": True}),
+        ("joint", lambda: JointKnobScheduler(plan),
+         {"resource_aware": True}),
+    )
+
+
+def _run_regime(arch, regime_kw, n_devices, per_round, rounds, seed=0,
+                composition=None):
+    """Drive every policy over the SAME participant draws under one
+    resource regime. Returns {policy: (makespan, sample_mass)}."""
+    from repro.comm import CommChannel
+    from repro.configs import get_config
+    from repro.core.driver import AnalyticCost, RoundDriver
+    from repro.core.simulation import make_device_grid
+    from repro.core.split import default_plan
+    from repro.models import SplitModel
+    from repro.utils.flops import split_costs
+
+    model = SplitModel(get_config(arch))
+    plan = default_plan(model.n_units, k=3)
+    costs = {s: split_costs(model, s) for s in plan.split_points}
+    devices = make_device_grid(n_devices, seed=seed,
+                               composition=composition)
+    p = 128
+    out = {}
+    for name, mk_sched, drv_kw in _policies(plan):
+        ch = CommChannel(uplink_capacity=regime_kw.get("uplink", 0.0),
+                         downlink_capacity=regime_kw.get("downlink", 0.0))
+        sched = mk_sched()
+        drv = RoundDriver(
+            sched, AnalyticCost(ch, costs, p=p), devices,
+            mode="semi_async", pipeline=True,
+            staleness_cap=regime_kw.get("staleness_cap", 1),
+            server_concurrency=regime_kw.get("server_slots", 0),
+            gate_redispatch=regime_kw.get("gate", False), **drv_kw)
+        rng = np.random.default_rng(seed)
+        mass = 0.0
+        for _ in range(rounds):
+            part = rng.choice(devices, size=per_round, replace=False)
+            drv.run_round(part)
+            fracs = getattr(sched, "selected_fracs", None) or {}
+            mass += sum(p * fracs.get(d.cid, 1.0) for d in part)
+        drv.flush()
+        out[name] = (drv.clock, mass)
+    return out
+
+
+# regime -> (resource knobs, device mix). The server-bound regime runs
+# a FAST-client mix (5:3:2) so the FIFO slot is the true bottleneck —
+# on a straggler mix the low devices' client compute masks whatever the
+# queue does; the link regimes keep the paper's straggler-heavy 2:3:5.
+REGIMES = (
+    ("server_bound", {"server_slots": 1},
+     {"high": 5, "mid": 3, "low": 2}),
+    ("uplink_jam", {"server_slots": 2, "uplink": "SERVER_RATE"},
+     {"high": 2, "mid": 3, "low": 5}),
+    ("duplex_gate", {"server_slots": 2, "uplink": "SERVER_RATE",
+                     "downlink": "SERVER_RATE", "gate": True},
+     {"high": 2, "mid": 3, "low": 5}),
+)
+
+
+def run(quick: bool = False):
+    from repro.core.simulation import SERVER_RATE
+    rounds = 8 if quick else 16
+    n_dev = 30 if quick else 60
+
+    speedups = {}
+    for rname, kw, comp in REGIMES:
+        kw = {k: (SERVER_RATE if v == "SERVER_RATE" else v)
+              for k, v in kw.items()}
+        with Timer() as t:
+            res = _run_regime("vgg16", kw, n_devices=n_dev,
+                              per_round=10, rounds=rounds,
+                              composition=comp)
+        (blind, m_blind), (aware, m_aware) = res["blind"], res["aware"]
+        joint, m_joint = res["joint"]
+        sp = blind / aware
+        speedups[rname] = sp
+        # apples-to-apples: blind and aware commit identical sample mass
+        # (same draws, full batches) — the frontier compares pure clock
+        assert m_blind == m_aware, (m_blind, m_aware)
+        emit(f"frontier.{rname}", t.us,
+             f"blind_makespan={blind:.2f};aware_makespan={aware:.2f};"
+             f"speedup={sp:.2f}x;joint_makespan={joint:.2f};"
+             f"joint_mass_frac={m_joint / m_blind:.3f}")
+
+    # ISSUE-9 acceptance: weak domination on the contended regimes —
+    # never slower (tiny fp slack), >=1.2x faster somewhere
+    for rname, sp in speedups.items():
+        assert sp >= 0.9995, f"aware slower than blind on {rname}: {sp}"
+    assert max(speedups.values()) >= 1.2, speedups
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import write_json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny-scale smoke (CI)")
+    ap.add_argument("--out", default="",
+                    help="write rows as JSON (for compare.py)")
+    a = ap.parse_args()
+    run(quick=a.quick)
+    if a.out:
+        write_json(a.out)

@@ -161,6 +161,22 @@ class CommChannel:
         return float(sum(jnp.sum(jnp.asarray(r, jnp.float32) ** 2) ** 0.5
                          for r in self._residuals.values()))
 
+    def residual_norm_of(self, cid) -> float:
+        """L2 mass of the feedback accumulators a single device holds
+        (residual keys are (direction, cid[, leaf]))."""
+        import jax.numpy as jnp
+        return float(sum(jnp.sum(jnp.asarray(r, jnp.float32) ** 2) ** 0.5
+                         for k, r in self._residuals.items()
+                         if k[1] == cid))
+
+    def residual_elements_of(self, cid) -> float:
+        """Element count of the device's live feedback accumulators —
+        what a cut-layer re-split would discard (shape change resets
+        the residual), priced by the resource-aware forecast as bytes
+        that must cross the wire again."""
+        return float(sum(r.size for k, r in self._residuals.items()
+                         if k[1] == cid))
+
     def reset_feedback(self):
         self._residuals = {}
 

@@ -415,6 +415,18 @@ class FluidLink:
             self._live = kept
             self.n_retired += len(retired)
 
+    def backlog_at(self, t: float):
+        """(active flow count, bytes still in flight) at time ``t`` —
+        the load the resource-aware forecast sees already draining on
+        this link before the next cohort even dispatches. A flow counts
+        as active when it has arrived and still holds bytes; flows that
+        have not arrived yet are excluded (they are the future, not the
+        backlog). Observational only (one right-censored solve)."""
+        rem = self.remaining_at(t)
+        active = [f for f in self._live
+                  if self._arrive[f] <= t and rem[f] > 0.0]
+        return len(active), sum(rem[f] for f in active)
+
     def utilization(self, t0: float, t1: float) -> float:
         """Fraction of the link capacity actually used over [t0, t1]:
         bytes drained by live flows in the interval over

@@ -8,8 +8,6 @@ used by the paper-reproduction benchmarks rather than the pod dry-run.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional
 
 
 def _round_up(x: int, m: int) -> int:
@@ -198,7 +196,13 @@ class DriverConfig:
     concurrent group backwards (FIFO queue; 0 = unbounded, the
     free-overlap regime) and ``gate_redispatch`` makes a device wait
     out its own draining download before it can start the next round's
-    upload — both only observable under ``pipeline``."""
+    upload — both only observable under ``pipeline``.
+    ``resource_aware`` upgrades the forecast from the link model's mean
+    rate to a ResourceView over live driver state (queue depth, fluid
+    backlogs, draining flows, learned horizon band — core/control.py);
+    ``auto_knobs`` lets an AggregationController probe nearby
+    (quorum, staleness_cap) pairs and lock the fastest (semi-async
+    only)."""
 
     exec_mode: str = "sync"             # sync | semi_async
     staleness_cap: int = 1              # max rounds an update may lag
@@ -207,6 +211,8 @@ class DriverConfig:
     pipeline: bool = False              # phase-level event pipeline
     server_concurrency: int = 0         # server backward slots; 0 = inf
     gate_redispatch: bool = False       # wait out own draining download
+    resource_aware: bool = False        # physics-priced split forecasts
+    auto_knobs: bool = False            # probe quorum/staleness pairs
 
 
 def make_reduced(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 256,

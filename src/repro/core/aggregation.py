@@ -14,8 +14,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
-
 from repro.models.api import SplitModel
 from repro.utils.tree import get_subtree, set_subtree, tree_weighted_sum
 

@@ -217,22 +217,37 @@ class AnalyticCost(CostModel):
         self._costs = costs if callable(costs) else costs.__getitem__
         self._cache: dict = {}
         self.p_of = p_of or (lambda cid: p)
+        # joint batch-size knob (None = off): ``frac_of(cid)`` scales
+        # the per-round sample count the Eq.-1 terms price — the driver
+        # wires it to the scheduler's ``selected_fracs`` when a joint
+        # scheduler is in play
+        self.frac_of: Optional[Callable] = None
 
     def cost(self, split: int) -> dict:
         if split not in self._cache:
             self._cache[split] = self._costs(split)
         return self._cache[split]
 
+    def _p_eff(self, cid):
+        """Per-round sample count with the batch-fraction knob applied
+        (identical to ``p_of`` while no fraction is selected)."""
+        p = self.p_of(cid)
+        if self.frac_of is not None:
+            f = self.frac_of(cid)
+            if f != 1.0:
+                p = max(1, int(round(p * f)))
+        return p
+
     def time_and_bytes(self, dev, split, clock, payload_bytes=None,
                        dispatch_bytes=None):
-        c, p = self.cost(split), self.p_of(_cid(dev))
+        c, p = self.cost(split), self._p_eff(_cid(dev))
         return self.channel.analytic_round_time(
             dev, wc_size=c["wc_size"], n_values=p * c["feat_size"],
             fc=p * c["fc"], fs=p * c["fs"], t=clock)
 
     def phase_cost(self, dev, split, clock, up_payload=None,
                    down_payload=None, disp_down=None, disp_up=None):
-        c, p = self.cost(split), self.p_of(_cid(dev))
+        c, p = self.cost(split), self._p_eff(_cid(dev))
         ch = self.channel
         rate = ch.rate(dev, clock) * BYTES_PER_ELEM
         n_values = p * c["feat_size"]
@@ -274,7 +289,7 @@ class AnalyticCost(CostModel):
         return cap * BYTES_PER_ELEM if cap else math.inf
 
     def forecast_time(self, dev, split, clock, horizon, load=1):
-        c, p = self.cost(split), self.p_of(_cid(dev))
+        c, p = self.cost(split), self._p_eff(_cid(dev))
         nbytes = self.channel.estimate_dispatch_round(c["wc_size"]) \
             + self.channel.estimate_round_payload(p * c["feat_size"])
         rate = self.channel.mean_rate(dev, clock,
@@ -304,7 +319,7 @@ class MeteredCost(AnalyticCost):
                        dispatch_bytes=None):
         if payload_bytes is None:
             return super().time_and_bytes(dev, split, clock)
-        c, p = self.cost(split), self.p_of(_cid(dev))
+        c, p = self.cost(split), self._p_eff(_cid(dev))
         disp = (dispatch_bytes if dispatch_bytes is not None
                 else self.channel.estimate_dispatch_round(c["wc_size"]))
         nbytes = disp + payload_bytes
@@ -574,10 +589,11 @@ class RoundDriver:
     def __init__(self, scheduler, cost: CostModel, devices, *,
                  mode: str = "sync", staleness_cap: int = 1,
                  quorum: float = 0.5, predictive: bool = False,
+                 resource_aware: bool = False,
                  pipeline: bool = False, warmup_devices=None,
                  server_concurrency: int = 0,
                  gate_redispatch: bool = False, recorder=None,
-                 fault_plan=None):
+                 fault_plan=None, knob_controller=None):
         if mode not in EXEC_MODES:
             raise ValueError(f"exec mode {mode!r}; known: {EXEC_MODES}")
         if staleness_cap < 0:
@@ -628,23 +644,74 @@ class RoundDriver:
         self.n_dispatched = 0           # work items pushed, ever
         self.n_committed = 0            # work items popped & committed
         self.n_abandoned = 0            # work items torn down by kills
-        if predictive:
+        # resource-aware control plane (core/control.py): the scheduler
+        # prices candidates against the LIVE queue/link/residual state
+        # through a read-only ResourceView, with the forecast horizon
+        # learned from the observed round-time distribution
+        self.resource_aware = bool(resource_aware)
+        self._history = None
+        self._last_split: dict = {}
+        self.view = None
+        if resource_aware:
+            from repro.core.control import ResourceView
+            from repro.observe.history import RoundTimeTracker
+            self._history = RoundTimeTracker()
+            self.view = ResourceView(self, self._history)
+        self.knob_controller = knob_controller
+        if predictive or resource_aware:
             if not hasattr(scheduler, "forecast"):
                 raise ValueError(
                     f"{type(scheduler).__name__} has no forecast hook; "
-                    "predictive mode needs a sliding scheduler")
+                    "predictive/resource-aware mode needs a sliding "
+                    "scheduler")
             scheduler.forecast = self._forecast
+            if resource_aware and hasattr(scheduler, "forecast_frac"):
+                # joint batch-size knob: the scheduler can price
+                # (split, frac) pairs through the same physics
+                scheduler.forecast_frac = (
+                    lambda cid, split, rec, frac:
+                    self._forecast(cid, split, rec, frac=frac))
+        # joint-knob consumers: the cost model prices each round with
+        # the scheduler's selected batch fractions (engine-owned cost
+        # models pre-install their own hook and are left alone)
+        if (getattr(scheduler, "selected_fracs", None) is not None
+                and getattr(cost, "frac_of", False) is None):
+            cost.frac_of = (lambda cid:
+                            scheduler.selected_fracs.get(cid, 1.0))
 
     # -------------------------------------------------------- predictive
-    def _forecast(self, cid, split, recorded):
-        """Scheduler hook: re-price the EMA entry with the link's mean
-        rate over the projected completion window [clock, clock+ema],
-        contention-adjusted by the round's cohort size."""
+    def _forecast(self, cid, split, recorded, frac=1.0):
+        """Scheduler hook. Blind predictive mode re-prices the EMA entry
+        with the link's mean rate over the projected completion window
+        [clock, clock+ema], contention-adjusted by the round's cohort
+        size. Resource-aware mode instead prices the candidate against
+        the live driver state (queue depth, link backlog, own draining
+        download, residual mass, learned horizon band) — falling back
+        to the blind path for cost models with no analytic surface."""
         dev = self._dev_by_id.get(cid)
         if dev is None:
             return None
+        if self.resource_aware:
+            from repro.core.control import resource_aware_forecast
+            ft = resource_aware_forecast(self.view, self.cost, dev,
+                                         split, recorded, frac=frac)
+            if ft is not None:
+                return ft
         return self.cost.forecast_time(dev, split, self.clock, recorded,
                                        load=self._load)
+
+    def _apply_knobs(self):
+        """Adopt the aggregation controller's current (quorum,
+        staleness_cap) at a window boundary. Safety rule: the cap never
+        drops below the age of the oldest pending event, so every
+        commit this window still satisfies the staleness invariant
+        (re-evaluated each round — the requested cap takes over once
+        the old stragglers drain)."""
+        q, cap = self.knob_controller.current()
+        max_age = max((self.round - e.round for e in self._pending),
+                      default=0)
+        self.quorum = q
+        self.staleness_cap = max(int(cap), max_age)
 
     # ------------------------------------------------------------- round
     def run_round(self, participants, execute=None) -> RoundResult:
@@ -662,6 +729,8 @@ class RoundDriver:
         """
         part = [_cid(p) for p in participants]
         clock0 = self.clock
+        if self.knob_controller is not None:
+            self._apply_knobs()
         # fault plan: rejoins + pre-dispatch kills land before selection
         # (a dead device is filtered from the cohort; its carried
         # straggler work is torn down at the current clock); mid-flight
@@ -731,6 +800,14 @@ class RoundDriver:
             commits = {c: clock0 + times[c] for c in part}
         for c in part:
             self.scheduler.observe(c, splits[c], times[c])
+        if self._history is not None:
+            # the control plane's learned horizon: observed (not
+            # forecast) per-device round times, and the split each
+            # device last ran — what the residual-aware re-split
+            # penalty compares candidates against
+            for c in part:
+                self._history.observe(c, times[c])
+                self._last_split[c] = splits[c]
 
         items = {key: max(commits[c] for c in members)
                  for key, members in groups.items() if members}
@@ -772,6 +849,8 @@ class RoundDriver:
 
         self.clock = new_clock
         self.comm += comm
+        if self.knob_controller is not None:
+            self.knob_controller.observe(new_clock - clock0)
         self.scheduler.end_round()
         if self.recorder is not None and self.recorder.enabled:
             self._observe_round(groups, commits, clock0, committed,
@@ -1222,6 +1301,13 @@ class RoundDriver:
         }
         if hasattr(self.scheduler, "export_state"):
             st["scheduler"] = self.scheduler.export_state()
+        if self._history is not None:
+            st["history"] = self._history.export_state()
+            st["last_split"] = sorted(self._last_split.items(),
+                                      key=lambda kv: str(kv[0]))
+        if self.knob_controller is not None:
+            st["knobs"] = self.knob_controller.export_state()
+            st["knobs_applied"] = [self.quorum, self.staleness_cap]
         return st
 
     def restore_state(self, st: dict):
@@ -1276,3 +1362,12 @@ class RoundDriver:
         self.n_abandoned = int(st["n_abandoned"])
         if "scheduler" in st and hasattr(self.scheduler, "restore_state"):
             self.scheduler.restore_state(st["scheduler"])
+        if "history" in st and self._history is not None:
+            self._history.restore_state(st["history"])
+            self._last_split = {c: int(s)
+                                for c, s in st["last_split"]}
+        if "knobs" in st and self.knob_controller is not None:
+            self.knob_controller.restore_state(st["knobs"])
+            q, cap = st["knobs_applied"]
+            self.quorum = float(q)
+            self.staleness_cap = int(cap)

@@ -59,7 +59,9 @@ class EngineConfig:
     use_balance: bool = True      # +B (False -> each device its own group)
     use_sliding: bool = True      # +M (False -> fixed largest split)
     scheduler: str = "median"     # 'median' (paper §3.1) | 'mintime'
-                                  # (beyond-paper, see scheduler.py)
+                                  # | 'joint' (beyond-paper, scheduler.py)
+    batch_fracs: tuple = ()       # 'joint' candidate batch fractions;
+                                  # () -> (1.0, 0.75, 0.5)
     rounds: int = 50
     clients_per_round: int = 10
     local_steps: int = 1          # E
@@ -109,6 +111,11 @@ class S2FLEngine:
             if ecfg.scheduler == "mintime":
                 from repro.core.scheduler import MinTimeScheduler
                 self.scheduler = MinTimeScheduler(self.plan)
+            elif ecfg.scheduler == "joint":
+                from repro.core.scheduler import JointKnobScheduler
+                self.scheduler = JointKnobScheduler(
+                    self.plan,
+                    batch_fracs=ecfg.batch_fracs or (1.0, 0.75, 0.5))
             else:
                 self.scheduler = SlidingSplitScheduler(self.plan)
         else:
@@ -141,14 +148,29 @@ class S2FLEngine:
                 lambda s: flops_util.split_costs(self.model, s,
                                                  seq_len=self._seq_len()),
                 p_of=self._p_of)
+        # the engine scales its REAL batches by the joint scheduler's
+        # selected fracs (_batch_size_of feeds both _p_of and
+        # _sample_batch), so the cost model's frac_of hook must stay
+        # inert — a unit sentinel here stops the driver's auto-wiring
+        # from scaling the already-scaled p a second time
+        cost.frac_of = lambda cid: 1.0
+        knobs = None
+        if getattr(dcfg, "auto_knobs", False) \
+                and dcfg.exec_mode == "semi_async":
+            from repro.core.control import (AggregationController,
+                                            default_knob_grid)
+            knobs = AggregationController(
+                default_knob_grid(dcfg.quorum, dcfg.staleness_cap))
         self.driver = RoundDriver(
             self.scheduler, cost, self.devices, mode=dcfg.exec_mode,
             staleness_cap=dcfg.staleness_cap, quorum=dcfg.quorum,
             predictive=dcfg.predictive, pipeline=dcfg.pipeline,
             server_concurrency=getattr(dcfg, "server_concurrency", 0),
             gate_redispatch=getattr(dcfg, "gate_redispatch", False),
+            resource_aware=getattr(dcfg, "resource_aware", False),
             warmup_devices=[d for d in self.devices if d.cid in data],
-            recorder=recorder, fault_plan=fault_plan)
+            recorder=recorder, fault_plan=fault_plan,
+            knob_controller=knobs)
         self._held = {}            # gid -> un-committed round results
         self._next_gid = 0
 
@@ -175,11 +197,24 @@ class S2FLEngine:
         labels = d["y"] if "y" in d else d["labels"]
         return label_histogram(labels, self.ecfg.n_classes)
 
+    def _batch_size_of(self, cid):
+        """Configured batch size scaled by the joint scheduler's selected
+        fraction for this round ({} / absent -> full batch). Single
+        source of truth for BOTH the cost model (_p_of) and the real
+        sampled batch, so priced and executed sample counts agree."""
+        b = self.ecfg.batch_size
+        fracs = getattr(self.scheduler, "selected_fracs", None)
+        if fracs:
+            f = fracs.get(cid, 1.0)
+            if f != 1.0:
+                b = max(1, int(round(b * f)))
+        return b
+
     def _sample_batch(self, cid):
         d = self.data[cid]
         n = len(d["y"] if "y" in d else d["labels"])
-        idx = self.rng.choice(n, size=min(self.ecfg.batch_size, n),
-                              replace=n < self.ecfg.batch_size)
+        b = self._batch_size_of(cid)
+        idx = self.rng.choice(n, size=min(b, n), replace=n < b)
         return {k: jnp.asarray(v[idx]) for k, v in d.items()}
 
     def _data_size(self, cid):
@@ -191,7 +226,7 @@ class S2FLEngine:
         truncates to the client's data size, so Eq.-1 compute terms and
         the warm-up payload estimate must truncate identically or the
         time table would disagree with the metered post-warm-up times."""
-        return self.ecfg.local_steps * min(self.ecfg.batch_size,
+        return self.ecfg.local_steps * min(self._batch_size_of(cid),
                                            int(self._data_size(cid)))
 
     # ------------------------------------------------- model wire legs

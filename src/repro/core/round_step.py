@@ -16,15 +16,13 @@ Equivalence with the host engine at E=1 is asserted in tests.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.models.api import SplitModel
-from repro.models.sharding import batch_spec, data_axes, model_param_specs
+from repro.models.sharding import batch_spec, model_param_specs
 
 
 def make_s2fl_loss(cfg, split: int, n_groups: int, dp_axes=None,

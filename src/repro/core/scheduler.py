@@ -152,6 +152,82 @@ class MinTimeScheduler(SlidingSplitScheduler):
         return out
 
 
+class JointKnobScheduler(MinTimeScheduler):
+    """AdaptSFL/HASFL-style joint tuning: the candidate space is the
+    cross product of split points and per-client batch FRACTIONS, and
+    each device picks the pair minimizing its forecast time — with a
+    data-preserving tie rule: among candidates within
+    ``frac_tolerance`` of the fastest, the LARGEST batch fraction wins,
+    so a marginal time win never silently sacrifices training samples.
+
+    Pricing a fraction needs a forecaster that understands how compute
+    and payload scale with the sample count; the driver installs
+    ``forecast_frac(cid, split, ema_t, frac)`` in resource-aware mode
+    (``core/control.py``). Without it, fractions are not priced and the
+    selection degenerates to MinTime at full batch — the knob only
+    activates alongside a physics-aware forecast, never on a blind EMA.
+
+    ``selected_fracs`` ({cid: frac}, rebuilt by every ``select``) is
+    the consumers' surface: the driver wires it into the cost model's
+    ``frac_of`` hook and the engine scales its real batches with it."""
+
+    def __init__(self, plan: SplitPlan, ema: float = 0.5, forecast=None,
+                 batch_fracs=(1.0, 0.75, 0.5),
+                 frac_tolerance: float = 0.1):
+        super().__init__(plan, ema=ema, forecast=forecast)
+        fracs = sorted({float(f) for f in batch_fracs}, reverse=True)
+        if not fracs or any(not 0.0 < f <= 1.0 for f in fracs):
+            raise ValueError(f"batch fracs must be in (0, 1]: "
+                             f"{batch_fracs}")
+        if frac_tolerance < 0.0:
+            raise ValueError(f"frac_tolerance must be >= 0: "
+                             f"{frac_tolerance}")
+        self.batch_fracs = tuple(fracs)
+        self.frac_tolerance = float(frac_tolerance)
+        self.selected_fracs: dict = {}
+        # installed by the driver in resource-aware mode:
+        # (cid, split, ema_t, frac) -> predicted time, None = unpriced
+        self.forecast_frac = None
+
+    def _frac_time(self, cid, split, t, frac):
+        if self.forecast_frac is not None:
+            ft = self.forecast_frac(cid, split, t, frac)
+            if ft is not None:
+                return float(ft)
+        return None
+
+    def select(self, participants) -> dict:
+        # selection must see the UNSCALED p_of: consumers read the
+        # previous round's fracs through this dict, so clear it first
+        self.selected_fracs = {}
+        if self.warming_up or self.forecast_frac is None:
+            out = super().select(participants)
+            for c in participants:
+                self.selected_fracs[c] = self.batch_fracs[0]
+            return out
+        t = self._candidate_times(participants)
+        out = {}
+        for c in participants:
+            cands = []
+            for s in self.plan.split_points:
+                if t[c, s] is None:
+                    continue
+                for f in self.batch_fracs:
+                    tf = self._frac_time(c, s, t[c, s], f)
+                    cands.append((s, f, t[c, s] if tf is None else tf))
+            if not cands:
+                out[c] = self.plan.smallest()
+                self.selected_fracs[c] = self.batch_fracs[0]
+                continue
+            best = min(tt for _, _, tt in cands)
+            ok = [cand for cand in cands
+                  if cand[2] <= best * (1.0 + self.frac_tolerance)]
+            s, f, _ = min(ok, key=lambda cand: (-cand[1], cand[2]))
+            out[c] = s
+            self.selected_fracs[c] = f
+        return out
+
+
 class FixedSplitScheduler:
     """SFL baseline / S²FL+B ablation: everyone trains the largest client
     portion every round (the paper's SFL trains Wc_3)."""

@@ -24,7 +24,6 @@ def dirichlet_partition(labels, n_clients: int, alpha: float,
         for cid, part in enumerate(np.split(idx, cuts)):
             client_idx[cid].extend(part.tolist())
     # guarantee a minimum (move from the largest client)
-    sizes = [len(ci) for ci in client_idx]
     for cid in range(n_clients):
         while len(client_idx[cid]) < min_per_client:
             donor = int(np.argmax([len(ci) for ci in client_idx]))

@@ -7,8 +7,6 @@ from __future__ import annotations
 
 import os
 
-import jax.numpy as jnp
-
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"

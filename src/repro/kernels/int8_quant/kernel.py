@@ -21,7 +21,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 # Keep the affine range symmetric (+-127) so zp also fits comfortably in
 # fp32 and the dequant map needs no special-casing of -128.

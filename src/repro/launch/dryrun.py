@@ -19,8 +19,7 @@ import jax
 
 from repro.configs import get_config, list_configs
 from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import SHAPES, build_step, input_specs, \
-    shape_applicable
+from repro.launch.steps import SHAPES, build_step, shape_applicable
 from repro.utils import hlo as hlo_util
 from repro.utils.flops import model_flops_6nd
 

@@ -166,6 +166,25 @@ def build_parser() -> argparse.ArgumentParser:
                          "before its next upload may start (off = the "
                          "semi-async queue's overcommit optimism); "
                          "only observable under --pipeline")
+    # resource-aware control plane (core/control.py) — see
+    # core/README.md §Control plane
+    ap.add_argument("--resource-aware", action="store_true",
+                    help="price candidate splits against live driver "
+                         "state (server queue depth, fluid-link "
+                         "backlogs, draining flows, learned horizon "
+                         "band) instead of the link model's mean rate")
+    ap.add_argument("--scheduler", default="median",
+                    choices=["median", "mintime", "joint"],
+                    help="split policy: paper median matching, "
+                         "per-device mintime, or joint split x batch-"
+                         "fraction tuning (joint needs "
+                         "--resource-aware to price fractions)")
+    ap.add_argument("--batch-fracs", default="",
+                    help="comma list of candidate batch fractions for "
+                         "--scheduler joint (default 1.0,0.75,0.5)")
+    ap.add_argument("--auto-knobs", action="store_true",
+                    help="probe nearby (quorum, staleness_cap) pairs "
+                         "and lock the fastest (semi-async only)")
     # fault injection + restartable service loop (core/faults.py,
     # checkpoint/state.py) — see core/README.md §Failure semantics
     ap.add_argument("--fault-plan", default="",
@@ -234,12 +253,17 @@ def main(argv=None):
                         quorum=args.quorum, predictive=args.predictive,
                         pipeline=args.pipeline,
                         server_concurrency=args.server_slots,
-                        gate_redispatch=args.gate_redispatch)
+                        gate_redispatch=args.gate_redispatch,
+                        resource_aware=args.resource_aware,
+                        auto_knobs=args.auto_knobs)
+    fracs = tuple(float(f) for f in args.batch_fracs.split(",")
+                  if f.strip()) if args.batch_fracs else ()
     ecfg = EngineConfig(
         mode=args.mode, rounds=args.rounds,
         clients_per_round=args.per_round, batch_size=args.batch_size,
         local_steps=args.local_steps, lr=args.lr, seed=args.seed,
         use_balance=not args.no_balance, use_sliding=not args.no_sliding,
+        scheduler=args.scheduler, batch_fracs=fracs,
         n_classes=n_classes, comm=ccfg, driver=dcfg,
         fused_comm=args.fused_comm, fused_server=args.fused_server)
 

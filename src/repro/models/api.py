@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import CNNConfig, ModelConfig
+from repro.configs.base import CNNConfig
 from repro.models import cnn as cnn_mod
 from repro.models import transformer as tf_mod
 from repro.models.params import abstract_params, init_params

@@ -15,7 +15,6 @@ sequence-sharded over the `data` mesh axis):
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

@@ -7,8 +7,6 @@ portion is ``blocks[s:] + final_norm + head`` (see repro.core.split).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

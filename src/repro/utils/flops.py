@@ -14,7 +14,6 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import CNNConfig
 from repro.models.api import SplitModel, get_subtree
 from repro.models.params import count_params
 

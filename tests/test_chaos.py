@@ -35,7 +35,7 @@ from hypothesis_compat import given, settings, st
 from repro.comm import CommChannel, FluidLink
 from repro.core.driver import AnalyticCost, RoundDriver, _ServerQueue
 from repro.core.faults import FaultEvent, FaultPlan
-from repro.core.scheduler import FixedSplitScheduler, SlidingSplitScheduler
+from repro.core.scheduler import SlidingSplitScheduler
 from repro.core.simulation import make_device_grid
 from repro.core.split import SplitPlan
 

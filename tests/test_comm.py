@@ -4,7 +4,6 @@ end-to-end engine properties (int8 cuts accumulated comm >= 3.5x at
 matched rounds with loss still decreasing; a trace-driven link changes
 the sliding scheduler's split assignments vs the static link)."""
 import json
-import os
 
 import jax
 import jax.numpy as jnp

@@ -11,8 +11,7 @@ from repro.core.balance import (balance_permutation, eq2_distance,
                                 exhaustive_groups, greedy_groups,
                                 group_distance, label_histogram)
 from repro.core.scheduler import FixedSplitScheduler, SlidingSplitScheduler
-from repro.core.simulation import (Device, fedavg_round_time,
-                                   make_device_grid)
+from repro.core.simulation import Device, make_device_grid
 from repro.core.split import SplitPlan, default_plan
 from repro.configs import get_config, make_reduced
 from repro.models import SplitModel

@@ -1,8 +1,6 @@
 """Integration tests: Algorithm-2 engine end-to-end (all three modes +
 ablations), and equivalence of the fused SPMD round step with the host
 engine at E=1."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

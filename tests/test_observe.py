@@ -16,7 +16,6 @@ from repro.comm import CommChannel, StaticLink
 from repro.core.driver import AnalyticCost, RoundDriver
 from repro.core.scheduler import SlidingSplitScheduler
 from repro.core.simulation import make_device_grid
-from repro.core.split import SplitPlan
 from repro.observe import (Histogram, JsonlSink, MetricsRegistry,
                            NullRecorder, Recorder, chrome_trace,
                            load_recorder, summarize,

@@ -2,8 +2,6 @@
 including the non-monotone-time regime where median matching loses.
 Rounds are driven through the shared RoundDriver (CallableCost adapts a
 plain t_of(cid, split) table)."""
-import numpy as np
-import pytest
 
 from repro.core.driver import CallableCost, RoundDriver
 from repro.core.scheduler import (FixedSplitScheduler, MinTimeScheduler,

@@ -11,12 +11,11 @@ import sys
 import textwrap
 
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
-from repro.models.params import count_params, is_def, param_specs
+from repro.models.params import is_def, param_specs
 from repro.models.sharding import mesh_rules
 
 # training-heavy module: the quick loop skips it (-m "not slow"; see pytest.ini)

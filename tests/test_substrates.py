@@ -11,12 +11,12 @@ from hypothesis_compat import given, settings, st
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import get_config, make_reduced
-from repro.data.partition import dirichlet_partition, federate, iid_partition
+from repro.data.partition import dirichlet_partition, federate
 from repro.data.synthetic import make_image_dataset, make_lm_dataset
 from repro.models import SplitModel
 from repro.optim import adam, clip_by_global_norm, cosine_schedule, sgd
 from repro.utils.flops import (client_portion_size, full_size,
-                               model_flops_6nd, segment_param_counts,
+                               model_flops_6nd,
                                split_costs)
 
 KEY = jax.random.PRNGKey(0)

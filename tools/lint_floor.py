@@ -1,0 +1,215 @@
+"""Local stand-in for the CI ruff floor's dead-code rules.
+
+CI gates ``ruff check src tests benchmarks`` with F401 (unused
+import), F811 (redefinition), and F841 (unused local) selected
+(pyproject.toml). The dev image does not ship ruff, so this AST
+checker approximates exactly those three rules for the pre-push loop:
+
+    python tools/lint_floor.py src tests benchmarks
+
+It is intentionally conservative (no cross-module analysis, no type
+comments): a clean run here does not guarantee a clean ruff run, but
+every finding here is one ruff would also flag. ``# noqa`` comments
+(bare or listing the code) suppress a line's findings, matching ruff.
+``__init__.py`` files skip F401 — their imports are re-exports.
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+_NOQA = re.compile(r"#\s*noqa(?::\s*(?P<codes>[A-Z0-9, ]+))?", re.I)
+
+
+def _noqa_lines(src: str) -> dict:
+    """{lineno: set of silenced codes (empty set = all)}."""
+    out = {}
+    for i, line in enumerate(src.splitlines(), 1):
+        m = _NOQA.search(line)
+        if m:
+            codes = m.group("codes")
+            out[i] = ({c.strip().upper() for c in codes.split(",")}
+                      if codes else set())
+    return out
+
+
+class _Scope:
+    def __init__(self, node, is_function):
+        self.node = node
+        self.is_function = is_function
+        self.imports = {}       # name -> (lineno, code-source)
+        self.assigns = {}       # name -> lineno of last simple assign
+        self.defs = {}          # name -> lineno of last def/class/import
+        self.used: set = set()
+
+
+def _names_used(node) -> set:
+    used = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+            used.add(n.id)
+        elif isinstance(n, ast.Attribute):
+            root = n
+            while isinstance(root, ast.Attribute):
+                root = root.value
+            if isinstance(root, ast.Name):
+                used.add(root.id)
+        elif isinstance(n, ast.Constant) and isinstance(n.value, str):
+            pass
+    return used
+
+
+def _all_exports(tree) -> set:
+    """Names listed in a module-level ``__all__`` literal."""
+    out = set()
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "__all__" \
+                        and isinstance(node.value, (ast.List, ast.Tuple)):
+                    for elt in node.value.elts:
+                        if isinstance(elt, ast.Constant) \
+                                and isinstance(elt.value, str):
+                            out.add(elt.value)
+    return out
+
+
+def _import_names(node):
+    """(bound-name, lineno) pairs for an import statement."""
+    for alias in node.names:
+        if alias.name == "*":
+            continue
+        name = alias.asname or alias.name.split(".")[0]
+        yield name, node.lineno
+
+
+def _check_f841(fn, findings, path):
+    """Unused simple locals in one function body (skips _-prefixed,
+    augmented, unpacked, for-targets and closure cells — the
+    conservative pyflakes core)."""
+    assigned = {}        # name -> lineno (simple assigns only)
+    for node in ast.walk(fn):
+        if node is fn:
+            continue
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef, ast.Lambda)):
+            # nested scopes are walked separately; their loads count as
+            # uses of the outer name (closures), handled below
+            continue
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            if not name.startswith("_"):
+                assigned[name] = node.lineno
+    if not assigned:
+        return
+    used = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and not isinstance(node.ctx,
+                                                         ast.Store):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            root = node
+            while isinstance(root, ast.Attribute):
+                root = root.value
+            if isinstance(root, ast.Name):
+                used.add(root.id)
+        elif isinstance(node, (ast.AugAssign,)) \
+                and isinstance(node.target, ast.Name):
+            used.add(node.target.id)
+        elif isinstance(node, ast.Global):
+            used.update(node.names)
+        elif isinstance(node, ast.Nonlocal):
+            used.update(node.names)
+    for name, lineno in sorted(assigned.items(), key=lambda kv: kv[1]):
+        if name not in used:
+            findings.append((path, lineno, "F841",
+                             f"local variable `{name}` is assigned to "
+                             f"but never used"))
+
+
+def check_file(path: Path) -> list:
+    src = path.read_text()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:
+        return [(path, e.lineno or 0, "E999", f"syntax error: {e.msg}")]
+    findings = []
+    noqa = _noqa_lines(src)
+
+    # ---- F401: module-level imports never referenced
+    if path.name != "__init__.py":
+        imported = {}
+        for node in tree.body:
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                if isinstance(node, ast.ImportFrom) \
+                        and node.module == "__future__":
+                    continue
+                for name, lineno in _import_names(node):
+                    imported[name] = lineno
+        used = _names_used(tree) | _all_exports(tree)
+        for name, lineno in sorted(imported.items(),
+                                   key=lambda kv: kv[1]):
+            if name not in used:
+                findings.append((path, lineno, "F401",
+                                 f"`{name}` imported but unused"))
+
+    # ---- F811: redefinition of an unused def/class at the same scope
+    def scan_defs(body, where):
+        seen = {}
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                name = node.name
+                if name in seen and not any(
+                        isinstance(d, ast.Name) and d.id in (
+                            "overload", "property", "setter")
+                        for d in getattr(node, "decorator_list", [])):
+                    deco_ok = any(
+                        isinstance(d, ast.Attribute)
+                        and d.attr in ("setter", "getter", "deleter",
+                                       "register")
+                        for d in node.decorator_list)
+                    if not deco_ok:
+                        findings.append(
+                            (path, node.lineno, "F811",
+                             f"redefinition of `{name}` (from line "
+                             f"{seen[name]}) in {where}"))
+                seen[name] = node.lineno
+                if isinstance(node, ast.ClassDef):
+                    scan_defs(node.body, f"class {name}")
+    scan_defs(tree.body, "module")
+
+    # ---- F841: unused locals per function
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            _check_f841(node, findings, path)
+
+    # ---- apply noqa suppression
+    kept = []
+    for path_, lineno, code, msg in findings:
+        codes = noqa.get(lineno)
+        if codes is not None and (not codes or code in codes):
+            continue
+        kept.append((path_, lineno, code, msg))
+    return kept
+
+
+def main(argv) -> int:
+    roots = [Path(a) for a in (argv or ["src", "tests", "benchmarks"])]
+    files = []
+    for r in roots:
+        files.extend(sorted(r.rglob("*.py")) if r.is_dir() else [r])
+    findings = []
+    for f in files:
+        findings.extend(check_file(f))
+    for path, lineno, code, msg in findings:
+        print(f"{path}:{lineno}: {code} {msg}")
+    print(f"{len(findings)} finding(s) in {len(files)} files")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
