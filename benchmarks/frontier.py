@@ -20,6 +20,12 @@ on an uncontended fabric both price the same Eq.-1 physics):
                  on the device's own draining download. Blind knows
                  nothing of the gate; aware starts its forecast at
                  ``busy_until(cid)`` and adds both directions' backlog.
+  downlink_jam : shared egress only (one Table-1 server link for every
+                 dispatch/collect leg), 2 slots, free ingress. Blind
+                 halves the *uplink* by LOAD but treats the download as
+                 private; aware prices the marginal egress backlog
+                 (``behind x down / C_dn`` Pigouvian term) and steers
+                 away from splits with heavy model-dispatch legs.
 
 Each regime drives IDENTICAL participant draws through two policies
 (MinTime scheduler both — only the forecast differs: ``predictive``
@@ -106,6 +112,8 @@ REGIMES = (
      {"high": 2, "mid": 3, "low": 5}),
     ("duplex_gate", {"server_slots": 2, "uplink": "SERVER_RATE",
                      "downlink": "SERVER_RATE", "gate": True},
+     {"high": 2, "mid": 3, "low": 5}),
+    ("downlink_jam", {"server_slots": 2, "downlink": "SERVER_RATE"},
      {"high": 2, "mid": 3, "low": 5}),
 )
 

@@ -202,7 +202,13 @@ class DriverConfig:
     backlogs, draining flows, learned horizon band — core/control.py);
     ``auto_knobs`` lets an AggregationController probe nearby
     (quorum, staleness_cap) pairs and lock the fastest (semi-async
-    only)."""
+    only).
+    ``fleet_size`` switches the population to batched (P,) fleet tables
+    (core/fleet.py): cohorts are fleet-sampled, Device objects
+    materialize only for sampled cids. ``clusters`` > 1 turns on
+    hierarchical aggregation (devices → edge clusters → main server):
+    each cluster closes at its own ``cluster_quorum`` quantile, the
+    global window at ``quorum`` over the cluster close times."""
 
     exec_mode: str = "sync"             # sync | semi_async
     staleness_cap: int = 1              # max rounds an update may lag
@@ -213,6 +219,9 @@ class DriverConfig:
     gate_redispatch: bool = False       # wait out own draining download
     resource_aware: bool = False        # physics-priced split forecasts
     auto_knobs: bool = False            # probe quorum/staleness pairs
+    fleet_size: int = 0                 # batched population (0 = object grid)
+    clusters: int = 0                   # edge clusters (<=1 = flat window)
+    cluster_quorum: float = 1.0         # per-cluster close quantile
 
 
 def make_reduced(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 256,

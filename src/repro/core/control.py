@@ -27,6 +27,7 @@ This module closes the loop:
              + up(s) / min(r, C_up/(L+A)) + B_up / C_up
              + ahead · (d̄ + t_srv(s)) / slots + t_srv(s)
              + down(s) / min(r, C_dn/(L+A')) + B_dn / C_dn
+             + behind · down(s) / C_dn        # downlink externality
              + t_post(s)                      # client bwd + Wc collect
 
     with r the link's mean rate over the projected horizon, L the
@@ -39,6 +40,9 @@ This module closes the loop:
     makes a cohort of per-device argmins drain a contended server
     instead of piling onto it (every other live-state term is a
     split-independent constant that can never move an argmin). The
+    symmetric ``behind · down(s) / C_dn`` term prices the shared-egress
+    externality the same way: the candidate's dfx payload backlogs the
+    behind = A' + (L-1)/2 flows draining the downlink with it. The
     horizon is learned from the observed round-time distribution: the
     tracker's (q_lo, EMA, q_hi) band is priced and the WORST case
     taken, so a fade inside the uncertainty band moves the selection
@@ -49,10 +53,14 @@ This module closes the loop:
 ``AggregationController``
     AdaptSFL/HASFL-style aggregation-frequency tuning: deterministic
     successive probing over a small (quorum, staleness_cap) grid,
-    locking the argmin-mean-round-time setting. The driver applies it
-    at round start under a safety rule (the cap never drops below the
-    age of the oldest pending event, so the staleness invariant holds
-    through a downward change).
+    locking the argmin-mean-round-time setting among candidates whose
+    observed per-round loss delta does not regress more than
+    ``loss_tol`` past the configured anchor's (the engine feeds each
+    round's training loss via ``observe_loss`` — time-only scoring
+    would happily lock a window that commits nothing). The driver
+    applies it at round start under a safety rule (the cap never drops
+    below the age of the oldest pending event, so the staleness
+    invariant holds through a downward change).
 """
 from __future__ import annotations
 
@@ -250,6 +258,16 @@ def resource_aware_forecast(view: ResourceView, cost, dev, split: int,
         ahead = view.server_depth() + 0.5 * max(load - 1, 0)
         srv_wait = ahead * view.server_mean_duration(t_srv) / slots
         srv_social = ahead * t_srv / slots
+    # the symmetric downlink externality: the candidate's dfx transfer
+    # occupies the shared egress for down/dn_cap seconds, backlogging
+    # every flow draining behind it (live flows + the half-cohort
+    # arriving inside the same window) — without this term a fat
+    # downlink payload looks free to the per-device argmin exactly the
+    # way an unpriced FIFO slot did
+    dn_social = 0.0
+    if not math.isinf(dn_cap):
+        behind = n_dn + 0.5 * max(load - 1, 0)
+        dn_social = behind * down / dn_cap
 
     lo, mid, hi = view.horizon_band(cid, recorded)
     worst = None
@@ -268,7 +286,7 @@ def resource_aware_forecast(view: ResourceView, cost, dev, split: int,
              + lat2 + wc_leg / rate + CLIENT_FWD_FRAC * fc / dev.comp
              + up_wait + up / up_rate
              + srv_wait + srv_social + t_srv
-             + dn_wait + down / dn_rate
+             + dn_wait + dn_social + down / dn_rate
              + lat2 + wc_leg / rate
              + (1.0 - CLIENT_FWD_FRAC) * fc / dev.comp)
         if worst is None or t > worst:
@@ -296,9 +314,19 @@ class AggregationController:
     ``probe_rounds`` rounds, its mean round time is recorded, and after
     the sweep the argmin setting locks in (first-probed wins ties, so
     the configured anchor is preferred at equal cost). No RNG, no wall
-    clock — replays bit-exactly and checkpoints as three lists."""
+    clock — replays bit-exactly and checkpoints as flat lists.
 
-    def __init__(self, settings, probe_rounds: int = 4):
+    Round time alone is a trap: a loose quorum that commits almost
+    nothing closes windows fast while learning stalls. When the caller
+    also feeds the observed training loss (``observe_loss``, once per
+    round), each probe accumulates its mean per-round loss *delta*, and
+    at lock time any candidate whose mean delta regresses more than
+    ``loss_tol`` past the anchor setting's (index 0 — the configured
+    pair, never rejected) is disqualified before the time argmin runs.
+    With no loss signal the behavior is exactly the time-only tuner."""
+
+    def __init__(self, settings, probe_rounds: int = 4,
+                 loss_tol: float = 0.25):
         settings = [(float(q), int(cap)) for q, cap in settings]
         if not settings:
             raise ValueError("need at least one (quorum, cap) setting")
@@ -307,10 +335,16 @@ class AggregationController:
                 raise ValueError(f"bad knob setting ({q}, {cap})")
         self.settings = settings
         self.probe_rounds = int(probe_rounds)
+        self.loss_tol = float(loss_tol)
         self._sums = [0.0] * len(settings)
         self._counts = [0] * len(settings)
+        self._loss_sums = [0.0] * len(settings)
+        self._loss_counts = [0] * len(settings)
+        self._last_loss = None     # previous round's loss (delta base)
+        self._last_probe = 0       # setting the last observed round ran
         self._i = 0
         self.locked = None         # index once the sweep finished
+        self.rejected = ()         # indices disqualified on loss
 
     def current(self):
         """(quorum, staleness_cap) to run the next round with."""
@@ -321,28 +355,76 @@ class AggregationController:
         """Feed one round's duration under the current setting."""
         if self.locked is not None:
             return
+        self._last_probe = self._i
         self._sums[self._i] += float(round_time)
         self._counts[self._i] += 1
         if self._counts[self._i] >= self.probe_rounds:
             if self._i + 1 < len(self.settings):
                 self._i += 1
             else:
-                means = [s / max(n, 1)
-                         for s, n in zip(self._sums, self._counts)]
-                self.locked = min(range(len(means)),
-                                  key=lambda j: (means[j], j))
+                self._lock()
+
+    def observe_loss(self, loss):
+        """Feed the round's observed training loss (call after the
+        round's ``observe``; the delta vs the previous round accrues to
+        the setting that round actually ran under). Non-finite losses
+        are skipped — a NaN round neither poisons a probe nor resets
+        the delta base unfairly: the base just carries forward."""
+        loss = float(loss)
+        if not math.isfinite(loss):
+            return
+        if self._last_loss is not None and self.locked is None:
+            j = self._last_probe
+            self._loss_sums[j] += loss - self._last_loss
+            self._loss_counts[j] += 1
+        self._last_loss = loss
+
+    def _lock(self):
+        means = [s / max(n, 1) for s, n in zip(self._sums, self._counts)]
+        deltas = [ls / ln if ln else None
+                  for ls, ln in zip(self._loss_sums, self._loss_counts)]
+        anchor = deltas[0] if deltas[0] is not None else 0.0
+        eligible = [j for j in range(len(means))
+                    if j == 0 or deltas[j] is None
+                    or deltas[j] - anchor <= self.loss_tol]
+        self.rejected = tuple(j for j in range(len(means))
+                              if j not in eligible)
+        self.locked = min(eligible, key=lambda j: (means[j], j))
+
+    def loss_delta_means(self):
+        """Per-setting mean per-round loss delta (None = no signal)."""
+        return [ls / ln if ln else None
+                for ls, ln in zip(self._loss_sums, self._loss_counts)]
 
     # ------------------------------------------------- checkpoint state
     def export_state(self) -> dict:
         return {"settings": [[q, cap] for q, cap in self.settings],
                 "probe_rounds": self.probe_rounds,
+                "loss_tol": self.loss_tol,
                 "sums": list(self._sums), "counts": list(self._counts),
+                "loss_sums": [repr(x) for x in self._loss_sums],
+                "loss_counts": list(self._loss_counts),
+                "last_loss": (None if self._last_loss is None
+                              else repr(self._last_loss)),
+                "last_probe": self._last_probe,
+                "rejected": list(self.rejected),
                 "i": self._i, "locked": self.locked}
 
     def restore_state(self, st: dict):
         self.settings = [(float(q), int(cap)) for q, cap in st["settings"]]
         self.probe_rounds = int(st["probe_rounds"])
+        n = len(self.settings)
+        self.loss_tol = float(st.get("loss_tol", self.loss_tol))
         self._sums = [float(x) for x in st["sums"]]
         self._counts = [int(x) for x in st["counts"]]
+        # pre-loss-awareness checkpoints restore as a time-only tuner
+        self._loss_sums = [float(x) for x in st.get("loss_sums",
+                                                    [0.0] * n)]
+        self._loss_counts = [int(x) for x in st.get("loss_counts",
+                                                    [0] * n)]
+        last = st.get("last_loss")
+        self._last_loss = None if last is None else float(last)
+        self._last_probe = int(st.get("last_probe", 0))
+        self.rejected = tuple(int(j) for j in st.get("rejected", ()))
         self._i = int(st["i"])
         self.locked = None if st["locked"] is None else int(st["locked"])

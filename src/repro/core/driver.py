@@ -105,6 +105,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
+import zlib
 from typing import Callable, Optional
 
 from repro.comm.channel import MESSAGES_PER_ROUND
@@ -584,6 +585,14 @@ class RoundDriver:
     recorder  : an ``observe.TraceRecorder`` (None or the no-op default
                 = zero overhead: every hook site guards on
                 ``recorder.enabled`` before building any record)
+    fleet     : a ``core.fleet.Fleet`` batched population — devices may
+                then be empty; cohort members' Device objects
+                materialize lazily (O(active cohort), never O(P))
+    clusters / cluster_quorum : hierarchical aggregation (devices →
+                edge clusters → main server): each cluster closes at
+                its own ``cluster_quorum`` quantile, the global window
+                at ``quorum`` over the cluster close times; clusters
+                <= 1 is the flat window, bit-for-bit
     """
 
     def __init__(self, scheduler, cost: CostModel, devices, *,
@@ -593,13 +602,20 @@ class RoundDriver:
                  pipeline: bool = False, warmup_devices=None,
                  server_concurrency: int = 0,
                  gate_redispatch: bool = False, recorder=None,
-                 fault_plan=None, knob_controller=None):
+                 fault_plan=None, knob_controller=None,
+                 fleet=None, clusters: int = 0,
+                 cluster_quorum: float = 1.0):
         if mode not in EXEC_MODES:
             raise ValueError(f"exec mode {mode!r}; known: {EXEC_MODES}")
         if staleness_cap < 0:
             raise ValueError(f"staleness_cap must be >= 0: {staleness_cap}")
         if not 0.0 < quorum <= 1.0:
             raise ValueError(f"quorum must be in (0, 1]: {quorum}")
+        if not 0.0 < cluster_quorum <= 1.0:
+            raise ValueError(
+                f"cluster_quorum must be in (0, 1]: {cluster_quorum}")
+        if clusters < 0:
+            raise ValueError(f"clusters must be >= 0: {clusters}")
         if server_concurrency < 0:
             raise ValueError(f"server_concurrency must be >= 0 "
                              f"(0 = unbounded): {server_concurrency}")
@@ -610,6 +626,19 @@ class RoundDriver:
                                if warmup_devices is not None
                                else self.devices)
         self._dev_by_id = {_cid(d): d for d in self.devices}
+        # batched population (core/fleet.py): Device objects materialize
+        # lazily through _dev_of, only for sampled cids — the driver
+        # never walks the full population
+        self._fleet = fleet
+        self.clusters = int(clusters)
+        if fleet is not None:
+            if self.clusters == 0:
+                self.clusters = int(getattr(fleet, "clusters", 0))
+            elif getattr(fleet, "clusters", 0) != self.clusters:
+                # one source of truth for the topology: the driver's
+                # explicit knob wins and the fleet's mapping follows
+                fleet.clusters = self.clusters
+        self.cluster_quorum = float(cluster_quorum)
         self.mode = mode
         self.staleness_cap = staleness_cap
         self.quorum = quorum
@@ -679,6 +708,29 @@ class RoundDriver:
             cost.frac_of = (lambda cid:
                             scheduler.selected_fracs.get(cid, 1.0))
 
+    # ------------------------------------------------------------ fleet
+    def _dev_of(self, cid):
+        """Device for ``cid`` — from the object grid, else materialized
+        lazily from the fleet tables (cached so a returning cohort
+        member costs one dict hit). None when neither knows the cid."""
+        dev = self._dev_by_id.get(cid)
+        if dev is None and self._fleet is not None:
+            try:
+                dev = self._fleet.device(cid)
+            except (IndexError, TypeError, ValueError):
+                return None
+            self._dev_by_id[cid] = dev
+        return dev
+
+    def _cluster_of(self, cid):
+        """Edge-cluster assignment for hierarchical aggregation."""
+        if self._fleet is not None:
+            return self._fleet.cluster_of(cid)
+        try:
+            return int(cid) % self.clusters
+        except (TypeError, ValueError):
+            return zlib.crc32(str(cid).encode("utf8")) % self.clusters
+
     # -------------------------------------------------------- predictive
     def _forecast(self, cid, split, recorded, frac=1.0):
         """Scheduler hook. Blind predictive mode re-prices the EMA entry
@@ -688,7 +740,7 @@ class RoundDriver:
         the live driver state (queue depth, link backlog, own draining
         download, residual mass, learned horizon band) — falling back
         to the blind path for cost models with no analytic surface."""
-        dev = self._dev_by_id.get(cid)
+        dev = self._dev_of(cid)
         if dev is None:
             return None
         if self.resource_aware:
@@ -790,7 +842,7 @@ class RoundDriver:
         else:
             times, comm = {}, 0.0
             for c in part:
-                dev = self._dev_by_id.get(c, c)
+                dev = self._dev_of(c) or c
                 t, nbytes = self.cost.time_and_bytes(
                     dev, splits[c], clock0,
                     payload_bytes=payloads.get(c),
@@ -842,13 +894,21 @@ class RoundDriver:
                 if self._kill(e.cid, t_kill):
                     killed.append(e.cid)
 
-        fresh = [r for key, r in items.items()
+        fresh = [(r, self._item_cluster(groups.get(key) or (key,)))
+                 for key, r in items.items()
                  if (self.round, key) not in self._abandoned_ids]
         committed, staleness, new_clock = self._close_window(fresh, clock0)
         self._drain_downloads(new_clock)
 
         self.clock = new_clock
         self.comm += comm
+        if (self._fleet is not None and ch is not None
+                and hasattr(ch, "residual_elements_of")):
+            # fold the cohort's EF residual mass back into the (P,)
+            # population table — O(active cohort), and the only write
+            # the fleet sees from the round loop
+            for c in part:
+                self._fleet.note_residual(c, ch.residual_elements_of(c))
         if self.knob_controller is not None:
             self.knob_controller.observe(new_clock - clock0)
         self.scheduler.end_round()
@@ -970,7 +1030,7 @@ class RoundDriver:
 
         quants = {}
         for c in part:
-            dev = self._dev_by_id.get(c, c)
+            dev = self._dev_of(c) or c
             quants[c] = self.cost.phase_cost(
                 dev, splits[c], clock0, up_payload=pay_up.get(c),
                 down_payload=pay_down.get(c),
@@ -980,7 +1040,7 @@ class RoundDriver:
         self._round_uids = {}
         for c, pc in quants.items():
             if pc is None:             # no decomposition: atomic event
-                dev = self._dev_by_id.get(c, c)
+                dev = self._dev_of(c) or c
                 disp = (disp_down.get(c, 0.0) + disp_up.get(c, 0.0)
                         if c in disp_down or c in disp_up else None)
                 t, nbytes = self.cost.time_and_bytes(
@@ -1101,20 +1161,34 @@ class RoundDriver:
             out.append(heapq.heappop(self._pending))
         return out
 
-    def _close_window(self, fresh_readies, now: float):
-        """``fresh_readies``: this round's surviving work items' ready
-        times (their events are already in the heap — kills may have
-        removed some before the window closes). Returns (committed keys,
-        staleness per key in rounds, new clock)."""
+    def _item_cluster(self, members) -> int:
+        """Edge cluster of a work item = its first member's cluster
+        (groups are cluster-pure under the engine's fleet grouping;
+        mixed groups inherit the first member's edge)."""
+        if self.clusters <= 1:
+            return 0
+        return self._cluster_of(next(iter(members)))
+
+    def _close_window(self, fresh_items, now: float):
+        """``fresh_items``: (ready time, cluster) pairs for this round's
+        surviving work items (their events are already in the heap —
+        kills may have removed some before the window closes). Returns
+        (committed keys, staleness per key in rounds, new clock).
+
+        With ``clusters > 1`` the quorum is hierarchical: each edge
+        cluster closes at its own ``cluster_quorum`` quantile over its
+        members' ready times, then the main server closes at the
+        ``quorum`` quantile over the *cluster* close times — the
+        ParallelSFL two-level formulation. ``clusters <= 1`` reproduces
+        the flat window bit-for-bit, and so does one-device-per-cluster
+        (each cluster time degenerates to its single ready time)."""
         if self.mode == "sync" or self.staleness_cap == 0:
             # barrier: everything dispatched must land this round
             new_clock = max((e.ready for e in self._pending), default=now)
         elif not self._pending:
             return [], {}, now
         else:
-            fresh = sorted(fresh_readies)
-            q = max(1, math.ceil(self.quorum * len(fresh))) if fresh else 0
-            t_quorum = fresh[q - 1] if fresh else now
+            t_quorum = self._quorum_time(fresh_items, now)
             # any event that would exceed the staleness cap by waiting
             # for the NEXT window must be waited for in this one
             forced = [e.ready for e in self._pending
@@ -1127,6 +1201,27 @@ class RoundDriver:
         assert all(v <= max(self.staleness_cap, 0)
                    for v in staleness.values()), staleness
         return committed, staleness, new_clock
+
+    def _quorum_time(self, fresh_items, now: float) -> float:
+        """Quorum close time over this round's fresh items — flat
+        quantile, or the two-level cluster form when clusters > 1."""
+        if not fresh_items:
+            return now
+        if self.clusters > 1:
+            by_cluster: dict = {}
+            for ready, cl in fresh_items:
+                by_cluster.setdefault(cl, []).append(ready)
+            t_clusters = []
+            for cl in sorted(by_cluster):
+                rs = sorted(by_cluster[cl])
+                qc = max(1, math.ceil(self.cluster_quorum * len(rs)))
+                t_clusters.append(rs[qc - 1])
+            t_clusters.sort()
+            q = max(1, math.ceil(self.quorum * len(t_clusters)))
+            return t_clusters[q - 1]
+        readies = sorted(r for r, _ in fresh_items)
+        q = max(1, math.ceil(self.quorum * len(readies)))
+        return readies[q - 1]
 
     # --------------------------------------------------- fault injection
     def _kill(self, cid, t: float) -> bool:
@@ -1308,6 +1403,8 @@ class RoundDriver:
         if self.knob_controller is not None:
             st["knobs"] = self.knob_controller.export_state()
             st["knobs_applied"] = [self.quorum, self.staleness_cap]
+        if self._fleet is not None:
+            st["fleet"] = self._fleet.export_state()
         return st
 
     def restore_state(self, st: dict):
@@ -1371,3 +1468,5 @@ class RoundDriver:
             q, cap = st["knobs_applied"]
             self.quorum = float(q)
             self.staleness_cap = int(cap)
+        if "fleet" in st and self._fleet is not None:
+            self._fleet.restore_state(st["fleet"])

@@ -103,9 +103,23 @@ class S2FLEngine:
         self.ecfg = ecfg
         self.rng = np.random.default_rng(ecfg.seed)
         self.plan = plan or default_plan(model.n_units, k=ecfg.split_k)
-        self.devices = devices or sim.make_device_grid(len(data),
-                                                       seed=ecfg.seed)
+        # fleet mode (core/fleet.py): the population lives as (P,)
+        # tables, cohorts are fleet-sampled, and the object grid is
+        # never materialized — each fleet cid trains on the data shard
+        # cid mod n_shards
+        self.fleet = None
+        fleet_size = int(getattr(ecfg.driver, "fleet_size", 0) or 0)
+        if fleet_size and devices is None:
+            from repro.core.fleet import Fleet
+            self.fleet = Fleet.table1(
+                fleet_size, seed=ecfg.seed,
+                clusters=int(getattr(ecfg.driver, "clusters", 0)))
+            self.devices = []
+        else:
+            self.devices = devices or sim.make_device_grid(len(data),
+                                                           seed=ecfg.seed)
         self.dev_by_id = {d.cid: d for d in self.devices}
+        self._shards = sorted(data)
 
         if ecfg.mode == "s2fl" and ecfg.use_sliding:
             if ecfg.scheduler == "mintime":
@@ -170,7 +184,9 @@ class S2FLEngine:
             resource_aware=getattr(dcfg, "resource_aware", False),
             warmup_devices=[d for d in self.devices if d.cid in data],
             recorder=recorder, fault_plan=fault_plan,
-            knob_controller=knobs)
+            knob_controller=knobs, fleet=self.fleet,
+            clusters=int(getattr(dcfg, "clusters", 0)),
+            cluster_quorum=float(getattr(dcfg, "cluster_quorum", 1.0)))
         self._held = {}            # gid -> un-committed round results
         self._next_gid = 0
 
@@ -192,8 +208,17 @@ class S2FLEngine:
         return self.driver.comm
 
     # ------------------------------------------------------------------ data
+    def _shard_key(self, cid):
+        """Data shard a cid trains on. Object-grid cids own their shard
+        outright; fleet cids fold onto the federated partition by
+        ``cid mod n_shards`` (a 10^6-device population shares the same
+        non-IID shards, many devices per shard)."""
+        if self.fleet is None or cid in self.data:
+            return cid
+        return self._shards[int(cid) % len(self._shards)]
+
     def _client_hist(self, cid):
-        d = self.data[cid]
+        d = self.data[self._shard_key(cid)]
         labels = d["y"] if "y" in d else d["labels"]
         return label_histogram(labels, self.ecfg.n_classes)
 
@@ -211,14 +236,14 @@ class S2FLEngine:
         return b
 
     def _sample_batch(self, cid):
-        d = self.data[cid]
+        d = self.data[self._shard_key(cid)]
         n = len(d["y"] if "y" in d else d["labels"])
         b = self._batch_size_of(cid)
         idx = self.rng.choice(n, size=min(b, n), replace=n < b)
         return {k: jnp.asarray(v[idx]) for k, v in d.items()}
 
     def _data_size(self, cid):
-        d = self.data[cid]
+        d = self.data[self._shard_key(cid)]
         return float(len(d["y"] if "y" in d else d["labels"]))
 
     def _p_of(self, cid):
@@ -474,9 +499,16 @@ class S2FLEngine:
     # ------------------------------------------------------------- rounds
     def run_round(self):
         ecfg = self.ecfg
-        participants = list(self.rng.choice(
-            sorted(self.data), size=min(ecfg.clients_per_round,
-                                        len(self.data)), replace=False))
+        if self.fleet is not None:
+            # seeded fleet draw — churn/diurnal availability applied
+            # inside sample_cohort, dead devices never selected
+            participants = [int(c) for c in self.fleet.sample_cohort(
+                self.driver.round, ecfg.clients_per_round)]
+        else:
+            participants = list(self.rng.choice(
+                sorted(self.data), size=min(ecfg.clients_per_round,
+                                            len(self.data)),
+                replace=False))
         if ecfg.mode == "fedavg":
             return self._fedavg_round(participants)
         return self._sfl_round(participants)
@@ -495,7 +527,7 @@ class S2FLEngine:
                 groups = []
             elif ecfg.mode == "s2fl" and ecfg.use_balance:
                 groups = greedy_groups(
-                    [self._hists[c] for c in alive],
+                    [self._hists[self._shard_key(c)] for c in alive],
                     ecfg.group_size)
                 groups = [tuple(alive[i] for i in g) for g in groups]
             else:
@@ -713,6 +745,12 @@ class S2FLEngine:
                 t_download=max(p["down"] for p in rec.phases.values()),
                 downloads_in_flight=rec.downloads)
         self.history.append(entry)
+        # the aggregation controller scores probes on accuracy too: the
+        # observed loss trajectory disqualifies knob settings whose
+        # per-round loss delta regresses past the anchor's
+        kc = self.driver.knob_controller
+        if kc is not None and hasattr(kc, "observe_loss"):
+            kc.observe_loss(loss)
         return self.history[-1]
 
     def _seq_len(self):

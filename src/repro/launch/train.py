@@ -185,6 +185,23 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--auto-knobs", action="store_true",
                     help="probe nearby (quorum, staleness_cap) pairs "
                          "and lock the fastest (semi-async only)")
+    # batched million-device fleets (core/fleet.py) — see
+    # core/README.md §Fleet scale
+    ap.add_argument("--fleet-size", type=int, default=0,
+                    help="simulate this many devices as batched (P,) "
+                         "population tables: cohorts are fleet-sampled "
+                         "each round and Device objects materialize "
+                         "only for sampled cids (0 = the object grid "
+                         "sized by --clients)")
+    ap.add_argument("--clusters", type=int, default=0,
+                    help="edge clusters for hierarchical aggregation "
+                         "(devices -> clusters -> main server); <= 1 "
+                         "keeps the flat aggregation window")
+    ap.add_argument("--cluster-quorum", type=float, default=1.0,
+                    help="per-cluster close quantile: each cluster "
+                         "closes at this fraction of its members' "
+                         "arrivals, then --quorum applies over the "
+                         "cluster close times")
     # fault injection + restartable service loop (core/faults.py,
     # checkpoint/state.py) — see core/README.md §Failure semantics
     ap.add_argument("--fault-plan", default="",
@@ -255,7 +272,10 @@ def main(argv=None):
                         server_concurrency=args.server_slots,
                         gate_redispatch=args.gate_redispatch,
                         resource_aware=args.resource_aware,
-                        auto_knobs=args.auto_knobs)
+                        auto_knobs=args.auto_knobs,
+                        fleet_size=args.fleet_size,
+                        clusters=args.clusters,
+                        cluster_quorum=args.cluster_quorum)
     fracs = tuple(float(f) for f in args.batch_fracs.split(",")
                   if f.strip()) if args.batch_fracs else ()
     ecfg = EngineConfig(

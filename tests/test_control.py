@@ -414,3 +414,88 @@ def test_aware_forecast_none_for_non_analytic_cost():
     class Opaque:
         pass
     assert resource_aware_forecast(None, Opaque(), None, 2, 1.0) is None
+
+
+# ---------------------------------------------------------------------------
+# AggregationController loss-delta guard
+# ---------------------------------------------------------------------------
+def _probe_sweep(ctl, times, losses):
+    """Drive one full sweep: per round, observe(time) then
+    observe_loss(loss) — the engine's call order."""
+    for t, lo in zip(times, losses):
+        ctl.observe(t)
+        ctl.observe_loss(lo)
+
+
+def test_controller_rejects_fast_but_lossy_setting():
+    """The loss guard: a setting that wins on round time but whose
+    mean per-round loss delta regresses > loss_tol past the anchor's
+    is disqualified before the argmin."""
+    ctl = AggregationController([(0.9, 0), (0.5, 1), (0.3, 3)],
+                                probe_rounds=2, loss_tol=0.25)
+    # per-round (time, loss): s0 slow/learning, s1 mid/learning,
+    # s2 fastest but loss climbs +1.0/round
+    _probe_sweep(ctl,
+                 times=[5.0, 5.0, 4.0, 4.0, 1.0, 1.0],
+                 losses=[10.0, 9.9, 9.8, 9.7, 10.7, 11.7])
+    assert ctl.locked == 1                      # argmin over survivors
+    assert ctl.rejected == (2,)
+    deltas = ctl.loss_delta_means()
+    assert deltas[0] < 0 and deltas[1] < 0 and deltas[2] > 0.9
+
+
+def test_controller_anchor_never_rejected():
+    """Index 0 is the configured pair — even if every probe regresses
+    loss, the anchor survives and wins when all others are rejected."""
+    ctl = AggregationController([(0.9, 0), (0.5, 1), (0.3, 3)],
+                                probe_rounds=2, loss_tol=0.25)
+    _probe_sweep(ctl,
+                 times=[9.0, 9.0, 1.0, 1.0, 1.0, 1.0],
+                 losses=[10.0, 9.9, 11.9, 13.9, 15.9, 17.9])
+    assert ctl.locked == 0                      # slowest, but only safe
+    assert set(ctl.rejected) == {1, 2}
+
+
+def test_controller_without_loss_signal_is_time_only():
+    """No observe_loss calls -> the original time-argmin tuner, no
+    rejections (backward-compatible default)."""
+    ctl = AggregationController([(0.9, 0), (0.5, 1), (0.3, 3)],
+                                probe_rounds=2)
+    for t in (5.0, 5.0, 4.0, 4.0, 1.0, 1.0):
+        ctl.observe(t)
+    assert ctl.locked == 2
+    assert ctl.rejected == ()
+
+
+def test_controller_skips_non_finite_losses():
+    ctl = AggregationController([(0.9, 0), (0.5, 1)], probe_rounds=1)
+    ctl.observe(2.0)
+    ctl.observe_loss(float("nan"))              # neither poisons nor
+    ctl.observe_loss(10.0)                      # resets the base
+    ctl.observe(1.0)
+    ctl.observe_loss(float("inf"))
+    assert ctl.locked is not None
+    assert ctl.loss_delta_means()[1] is None    # inf never accrued
+
+
+def test_controller_loss_state_round_trip_and_legacy_compat():
+    ctl = AggregationController([(0.9, 0), (0.5, 1), (0.3, 3)],
+                                probe_rounds=2, loss_tol=0.1)
+    _probe_sweep(ctl, times=[5.0, 5.0, 4.0], losses=[10.0, 9.9, 9.8])
+    st = ctl.export_state()
+    clone = AggregationController([(0.9, 0)])
+    clone.restore_state(st)
+    assert clone.loss_delta_means() == ctl.loss_delta_means()
+    assert clone._last_loss == ctl._last_loss
+    # continuing both yields the identical lock + rejection set
+    for c in (ctl, clone):
+        _probe_sweep(c, times=[4.0, 1.0, 1.0], losses=[9.7, 10.7, 11.7])
+    assert clone.locked == ctl.locked
+    assert clone.rejected == ctl.rejected
+    # a pre-loss-guard checkpoint (no loss keys) restores cleanly
+    legacy = {k: v for k, v in st.items()
+              if not k.startswith(("loss_", "last_")) and k != "rejected"}
+    old = AggregationController([(0.9, 0)])
+    old.restore_state(legacy)
+    assert old.loss_delta_means() == [None, None, None]
+    assert old.current() == ctl.settings[1]

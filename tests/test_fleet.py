@@ -1,0 +1,301 @@
+"""Vectorized fleet tables (core/fleet.py) + the fleet-backed driver.
+
+Covers the ISSUE-10 tentpole end to end:
+
+  * Fleet.table1 is the exact vectorized dual of make_device_grid —
+    same rng stream, bit-identical per-cid devices on both composition
+    paths;
+  * seeded cohort sampling: deterministic in (seed, round), distinct
+    cids, never a dead device, O(P) fallback when availability is low;
+  * churn conservation: the dead-set evolves by the (seed, round)
+    trace only, rejoins return exactly the killed cids;
+  * diurnal availability: duty-cycle fraction realized over a period;
+  * small-N equivalence golden: the fleet driver reproduces the object
+    driver's per-round commits, comm bytes and final clock bit-for-bit
+    on sync AND semi-async pipelined paths;
+  * cluster-quorum properties: flat == 1 cluster == P clusters
+    (degeneracy), hierarchical close never violates the staleness cap,
+    exactly-once ledger under churn;
+  * checkpoint: fleet state round-trips through JSON inside the driver
+    snapshot and replays the identical availability trace.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.comm import CommChannel
+from repro.core.driver import AnalyticCost, RoundDriver
+from repro.core.fleet import Fleet
+from repro.core.scheduler import MinTimeScheduler
+from repro.core.simulation import SERVER_FLOPS, make_device_grid
+from repro.core.split import SplitPlan
+
+PLAN = SplitPlan(n_units=8, split_points=(1, 2, 4))
+
+
+def _rand_costs(rng):
+    out = {}
+    for s in PLAN.split_points:
+        out[s] = dict(wc_size=float(rng.uniform(1e4, 2e6)),
+                      feat_size=float(rng.uniform(1e2, 2e4)),
+                      fc=float(rng.uniform(1e7, 3e9)),
+                      fs=float(rng.uniform(1e7, 3e9)))
+    return out
+
+
+def _cost(p=32):
+    ch = CommChannel(codec="fp32", latency=0.01,
+                     uplink_capacity=2e7, downlink_capacity=2e7)
+    return AnalyticCost(ch, _rand_costs(np.random.default_rng(7)), p=p)
+
+
+# ---------------------------------------------------------------------------
+# table construction
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("composition",
+                         [None, {"high": 5, "mid": 3, "low": 2}])
+@pytest.mark.parametrize("n", [1, 9, 64, 257])
+def test_table1_matches_object_grid(n, composition):
+    fleet = Fleet.table1(n, seed=11, composition=composition)
+    devices = make_device_grid(n, seed=11, composition=composition)
+    assert fleet.population == n
+    for d in devices:
+        fd = fleet.device(d.cid)
+        assert (fd.cid, fd.comp, fd.rate) == (d.cid, d.comp, d.rate)
+
+
+def test_from_devices_round_trip():
+    devices = make_device_grid(12, seed=5)
+    fleet = Fleet.from_devices(devices)
+    assert all(fleet.device(d.cid) == d for d in devices)
+    with pytest.raises(ValueError):
+        Fleet.from_devices(devices[1:])          # non-contiguous cids
+
+
+def test_table_memory_is_flat_arrays():
+    fleet = Fleet.table1(10_000, seed=0)
+    # 4 float64 tables -> 32 B/device; the benchmark asserts <= 64
+    assert fleet.nbytes == 4 * 8 * 10_000
+
+
+def test_eq1_times_matches_scalar_formula():
+    fleet = Fleet.table1(40, seed=2)
+    kw = dict(wc_size=5e5, feat_size=3e3, p=32.0, fc=2e8, fs=4e8)
+    t = fleet.eq1_times([3, 17, 39], **kw)
+    for got, cid in zip(t, (3, 17, 39)):
+        d = fleet.device(cid)
+        want = ((2 * kw["wc_size"] + 2 * kw["p"] * kw["feat_size"])
+                / d.rate + kw["fc"] / d.comp + kw["fs"] / SERVER_FLOPS)
+        assert abs(got - want) <= 1e-9 * want
+
+
+# ---------------------------------------------------------------------------
+# sampling, churn, availability
+# ---------------------------------------------------------------------------
+def test_sample_cohort_deterministic_and_distinct():
+    a = Fleet.table1(1_000, seed=4)
+    b = Fleet.table1(1_000, seed=4)
+    for r in range(5):
+        ca, cb = a.sample_cohort(r, 32), b.sample_cohort(r, 32)
+        assert ca == cb                          # (seed, round) replay
+        assert len(set(ca)) == 32
+        assert all(0 <= c < 1_000 for c in ca)
+    assert a.sample_cohort(0, 32) != a.sample_cohort(1, 32)
+    assert len(Fleet.table1(8, seed=0).sample_cohort(0, 50)) == 8  # clamp
+
+
+def test_dead_devices_never_sampled_under_churn():
+    fleet = Fleet.table1(400, seed=6, churn_kill_prob=0.05,
+                         churn_rejoin_prob=0.3)
+    for r in range(30):
+        cohort = fleet.sample_cohort(r, 24)
+        dead = fleet.dead_set()
+        assert not dead.intersection(cohort)
+        # the sparse path and the dense mask must agree
+        mask = fleet.availability_mask(r)
+        assert all(mask[c] for c in cohort)
+        assert not any(mask[c] for c in dead)
+    assert fleet.dead_set()                      # churn actually ran
+
+
+def test_churn_trace_is_seed_deterministic():
+    mk = lambda: Fleet.table1(300, seed=9, churn_kill_prob=0.1,
+                              churn_rejoin_prob=0.5)
+    a, b = mk(), mk()
+    for r in range(12):
+        a.sample_cohort(r, 10)
+    b.sample_cohort(11, 10)                      # lazy catch-up path
+    assert a.dead_set() == b.dead_set()
+
+
+def test_diurnal_duty_fraction():
+    fleet = Fleet.table1(2_000, seed=1, diurnal_period=8,
+                         diurnal_duty=0.5)
+    fracs = [fleet.availability_mask(r).mean() for r in range(8)]
+    assert abs(np.mean(fracs) - 0.5) < 0.05
+    cohort = fleet.sample_cohort(3, 64)
+    assert all(fleet.availability_mask(3)[c] for c in cohort)
+
+
+def test_sampling_falls_back_when_availability_is_scarce():
+    fleet = Fleet.table1(64, seed=3, churn_rejoin_prob=0.0)
+    for c in range(60):                          # only 4 survivors
+        fleet.kill(c)
+    cohort = fleet.sample_cohort(0, 16)
+    assert sorted(cohort) == [60, 61, 62, 63]
+
+
+def test_state_round_trip_replays_identical_trace():
+    mk = lambda: Fleet.table1(500, seed=13, churn_kill_prob=0.08,
+                              churn_rejoin_prob=0.4, diurnal_period=6,
+                              diurnal_duty=0.8)
+    a = mk()
+    for r in range(6):
+        a.sample_cohort(r, 20)
+    a.note_residual(17, 123.5)
+    st = json.loads(json.dumps(a.export_state()))
+    b = mk()
+    b.restore_state(st)
+    assert b.dead_set() == a.dead_set()
+    assert b.residual_mass[17] == 123.5
+    for r in range(6, 12):
+        assert a.sample_cohort(r, 20) == b.sample_cohort(r, 20)
+    with pytest.raises(ValueError):
+        Fleet.table1(10, seed=13).restore_state(st)  # population mismatch
+
+
+# ---------------------------------------------------------------------------
+# fleet-backed driver: equivalence golden + hierarchy properties
+# ---------------------------------------------------------------------------
+def _cohorts(P, rounds, k, seed=3):
+    sampler = Fleet.table1(P, seed=seed)
+    return [sampler.sample_cohort(r, k) for r in range(rounds)]
+
+
+@pytest.mark.parametrize("mode,pipeline",
+                         [("sync", False), ("semi_async", True)])
+def test_fleet_driver_matches_object_driver(mode, pipeline):
+    """The equivalence golden: identical cohorts + identical warm-up
+    set -> the fleet driver IS the object driver (clock, per-round
+    commits, comm bytes) on fp32."""
+    P, rounds, k = 24, 6, 8
+    cohorts = _cohorts(P, rounds, k)
+
+    devs = make_device_grid(P, seed=3)
+    d_obj = RoundDriver(MinTimeScheduler(PLAN), _cost(), devs,
+                        mode=mode, pipeline=pipeline,
+                        quorum=0.5, staleness_cap=2)
+    fl = Fleet.table1(P, seed=3)
+    d_flt = RoundDriver(MinTimeScheduler(PLAN), _cost(), [], fleet=fl,
+                        mode=mode, pipeline=pipeline,
+                        quorum=0.5, staleness_cap=2,
+                        warmup_devices=fl.devices_for(range(P)))
+    for r in range(rounds):
+        a = d_obj.run_round([devs[c] for c in cohorts[r]])
+        b = d_flt.run_round(cohorts[r])
+        assert a.committed == b.committed
+        assert a.splits == b.splits
+    d_obj.flush()
+    d_flt.flush()
+    assert d_obj.clock == d_flt.clock
+    assert d_obj.comm == d_flt.comm
+
+
+def test_cluster_degeneracies_are_bit_equal():
+    """clusters <= 1 and one-device-per-cluster both degenerate to the
+    flat quorum close — same clock to the bit."""
+    P, rounds, k = 24, 5, 8
+    cohorts = _cohorts(P, rounds, k)
+    clocks = []
+    for clusters, cq in ((0, 1.0), (1, 0.7), (P, 0.7)):
+        fl = Fleet.table1(P, seed=3, clusters=clusters)
+        drv = RoundDriver(MinTimeScheduler(PLAN), _cost(), [], fleet=fl,
+                          mode="semi_async", pipeline=True,
+                          quorum=0.6, staleness_cap=2,
+                          clusters=clusters, cluster_quorum=cq)
+        for r in range(rounds):
+            drv.run_round(cohorts[r])
+        drv.flush()
+        clocks.append(drv.clock)
+    assert clocks[0] == clocks[1] == clocks[2]
+
+
+def test_hierarchical_quorum_properties():
+    """Real hierarchy (4 clusters, partial cluster quorum): commits
+    never exceed the staleness cap, the ledger stays exactly-once, and
+    the partial-quorum close is never slower than the full barrier."""
+    P, rounds, k = 32, 8, 12
+    cohorts = _cohorts(P, rounds, k, seed=5)
+
+    def drive(cq):
+        fl = Fleet.table1(P, seed=5, clusters=4)
+        drv = RoundDriver(MinTimeScheduler(PLAN), _cost(), [], fleet=fl,
+                          mode="semi_async", pipeline=True,
+                          quorum=0.6, staleness_cap=2,
+                          clusters=4, cluster_quorum=cq)
+        stale = []
+        for r in range(rounds):
+            rec = drv.run_round(cohorts[r])
+            stale += list(rec.staleness.values())
+        drv.flush()
+        assert drv.n_dispatched == drv.n_committed + drv.n_abandoned
+        return drv.clock, stale
+
+    hier, stale = drive(0.7)
+    full, _ = drive(1.0)
+    assert all(0 <= v <= 2 for v in stale)
+    assert hier <= full + 1e-9
+
+
+def test_driver_materializes_only_sampled_devices():
+    fl = Fleet.table1(5_000, seed=1, clusters=8)
+    drv = RoundDriver(MinTimeScheduler(PLAN), _cost(), [], fleet=fl,
+                      mode="semi_async", pipeline=True,
+                      quorum=0.6, staleness_cap=2, cluster_quorum=0.8)
+    for r in range(3):
+        drv.run_round(fl.sample_cohort(r, 16))
+    drv.flush()
+    assert len(drv._dev_by_id) <= 3 * 16
+
+
+def test_driver_syncs_cluster_topology_onto_fleet():
+    fl = Fleet.table1(20, seed=0, clusters=4)
+    drv = RoundDriver(MinTimeScheduler(PLAN), _cost(), [], fleet=fl)
+    assert drv.clusters == 4                     # fleet's knob adopted
+    fl2 = Fleet.table1(20, seed=0, clusters=4)
+    drv2 = RoundDriver(MinTimeScheduler(PLAN), _cost(), [], fleet=fl2,
+                       clusters=6)
+    assert drv2.clusters == 6 and fl2.clusters == 6  # driver knob wins
+
+
+def test_driver_checkpoint_carries_fleet_state():
+    """Snapshot mid-run, restore into a FRESH driver + fleet, and the
+    continuation is bit-identical (churn trace, dead-set, residual
+    table, clock)."""
+    def mk():
+        fl = Fleet.table1(200, seed=21, clusters=4,
+                          churn_kill_prob=0.1, churn_rejoin_prob=0.5)
+        drv = RoundDriver(MinTimeScheduler(PLAN), _cost(), [], fleet=fl,
+                          mode="semi_async", pipeline=True,
+                          quorum=0.6, staleness_cap=2,
+                          cluster_quorum=0.75)
+        return fl, drv
+
+    fl_a, a = mk()
+    for r in range(4):
+        a.run_round(fl_a.sample_cohort(r, 12))
+    st = json.loads(json.dumps(a.export_state()))
+    assert "fleet" in st
+
+    fl_b, b = mk()
+    b.restore_state(st)
+    assert fl_b.dead_set() == fl_a.dead_set()
+    for r in range(4, 8):
+        ca, cb = fl_a.sample_cohort(r, 12), fl_b.sample_cohort(r, 12)
+        assert ca == cb
+        ra, rb = a.run_round(ca), b.run_round(cb)
+        assert ra.committed == rb.committed
+    a.flush()
+    b.flush()
+    assert a.clock == b.clock

@@ -336,3 +336,62 @@ def test_engine_fused_flags_match_sequential(codec, ef):
     assert abs(p0 - p1) < 1e-2                 # vmap numerics drift only
     assert abs(e0.channel.residual_norm()
                - e1.channel.residual_norm()) < 1e-2
+
+
+@pytest.mark.slow
+def test_engine_fused_flags_match_sequential_under_faults():
+    """Fault teardown (mid-flight kills, quarantine, abandonment) is
+    driver-level and path-independent — the fused cohort path must see
+    the IDENTICAL exactly-once ledger, comm/clock trace, quarantine
+    set and residual mass as the sequential loop under the same fault
+    plan. Locks in the ISSUE-8 'fault-plan replay inside the fused
+    cohort path' gap as verified-equivalent."""
+    import dataclasses
+
+    from repro.configs import CommConfig, get_config
+    from repro.core.engine import EngineConfig, S2FLEngine
+    from repro.core.faults import FaultPlan
+    from repro.data.partition import federate
+    from repro.data.synthetic import make_image_dataset
+    from repro.models import SplitModel
+
+    ds = make_image_dataset(160, seed=1)
+    fed = federate(ds, 5, alpha=0.3, seed=1)
+    mk_plan = lambda: FaultPlan.random(
+        list(range(5)), 3, seed=11, kill_prob=0.3, rejoin_prob=0.6,
+        mid_flight_frac=0.8, server_policy="cancel",
+        residual_policy="restore")
+
+    def run(fused):
+        ecfg = EngineConfig(
+            mode="s2fl", rounds=3, clients_per_round=4, batch_size=8,
+            local_steps=2, seed=0,
+            comm=CommConfig(codec="int8", error_feedback=True))
+        ecfg = dataclasses.replace(
+            ecfg,
+            driver=dataclasses.replace(ecfg.driver, exec_mode="semi_async",
+                                       pipeline=True, quorum=0.5,
+                                       staleness_cap=2),
+            fused_comm=fused, fused_server=fused)
+        eng = S2FLEngine(SplitModel(get_config("resnet8")), fed, ecfg,
+                         fault_plan=mk_plan())
+        hist = eng.run(3)
+        return hist, eng
+
+    h0, e0 = run(False)
+    h1, e1 = run(True)
+    d0, d1 = e0.driver, e1.driver
+    # exactly-once ledger multiset, bit-equal under both paths
+    assert (d0.n_dispatched, d0.n_committed, d0.n_abandoned) == \
+           (d1.n_dispatched, d1.n_committed, d1.n_abandoned)
+    assert d0.n_abandoned > 0                   # the plan actually bit
+    for a, b in zip(h0, h1):
+        assert a["comm"] == b["comm"]
+        assert a["clock"] == b["clock"]
+        assert abs(a["loss"] - b["loss"]) < 1e-3
+    # quarantined EF residuals: same held devices, same total mass
+    assert set(e0.channel._quarantine) == set(e1.channel._quarantine)
+    assert abs(e0.channel.residual_norm()
+               - e1.channel.residual_norm()) < 1e-2
+    assert abs(e0.channel.ef_discarded_mass
+               - e1.channel.ef_discarded_mass) < 1e-6
